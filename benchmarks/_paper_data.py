@@ -1,0 +1,96 @@
+"""Published numbers from the paper's tables (mini-batch seconds) and the
+calibration protocol shared by the table benchmarks.
+
+Calibration: the paper's performance model consumes *empirically measured*
+per-layer cuDNN runtimes (§V-A).  Without the paper's GPUs we fit the two
+constants of the analytic surrogate — compute_efficiency (absolute scale)
+and eff_halfwork (small-kernel saturation) — per model family, on ONE
+column + ONE cell, and predict everything else.  The validated quantity is
+the *communication/overlap/scaling structure* of the model (the paper's
+contribution), not cuDNN absolute throughput.
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.core import perfmodel as pm
+from repro.core.distribution import Dist
+
+TABLE1 = {  # 1K mesh model: N -> {GPUs/sample: seconds}
+    4: {1: 0.403, 2: 0.2, 4: 0.121, 8: 0.0906, 16: 0.066},
+    8: {1: 0.399, 2: 0.201, 4: 0.124, 8: 0.0829, 16: 0.0681},
+    16: {1: 0.4, 2: 0.201, 4: 0.121, 8: 0.085, 16: 0.0739},
+    32: {1: 0.401, 2: 0.207, 4: 0.123, 8: 0.0874, 16: 0.0794},
+    64: {1: 0.407, 2: 0.208, 4: 0.124, 8: 0.0911, 16: 0.0839},
+    128: {1: 0.407, 2: 0.209, 4: 0.125, 8: 0.0931, 16: 0.0902},
+    256: {1: 0.401, 2: 0.209, 4: 0.127, 8: 0.0977},
+    512: {1: 0.393, 2: 0.209, 4: 0.126},
+    1024: {1: 0.4, 2: 0.211},
+}
+
+TABLE2 = {  # 2K mesh model: N -> {GPUs/sample: seconds}
+    2: {2: 0.247, 4: 0.12, 8: 0.0859, 16: 0.0683},
+    4: {2: 0.249, 4: 0.123, 8: 0.0895, 16: 0.0662},
+    8: {2: 0.25, 4: 0.125, 8: 0.0849, 16: 0.0665},
+    16: {2: 0.249, 4: 0.121, 8: 0.0848, 16: 0.0681},
+    32: {2: 0.251, 4: 0.122, 8: 0.0851, 16: 0.0703},
+    64: {2: 0.252, 4: 0.122, 8: 0.0856, 16: 0.0729},
+    128: {2: 0.252, 4: 0.122, 8: 0.0867, 16: 0.0748},
+    256: {2: 0.25, 4: 0.123, 8: 0.089},
+    512: {2: 0.249, 4: 0.123},
+}
+
+TABLE3 = {  # ResNet-50: N -> {scheme: seconds}; schemes: 1 = sample
+    # (32 samples/GPU), 2 = hybrid 32/2GPUs, 4 = hybrid 32/4GPUs
+    128: {1: 0.106, 2: 0.0734, 4: 0.0593},
+    256: {1: 0.106, 2: 0.0732, 4: 0.0671},
+    512: {1: 0.105, 2: 0.0776, 4: 0.0617},
+    1024: {1: 0.105, 2: 0.0747, 4: 0.0672},
+    2048: {1: 0.108, 2: 0.0733, 4: 0.0651},
+    4096: {1: 0.0984, 2: 0.078, 4: 0.066},
+    8192: {1: 0.109, 2: 0.0785, 4: 0.0725},
+    16384: {1: 0.108, 2: 0.0844, 4: 0.0792},
+    32768: {1: 0.109, 2: 0.0869},
+}
+
+# GPUs/sample -> (H-ways, W-ways): 2-D splits beyond 2, matching 4 GPUs/node
+SPLITS = {1: (1, 1), 2: (2, 1), 4: (2, 2), 8: (4, 2), 16: (4, 4)}
+
+
+def hybrid_dist(n_groups: int, hy: int, wx: int) -> tuple[Dist, dict]:
+    mesh_shape = {"d": max(n_groups, 1), "mh": hy, "mw": wx}
+    dims = {"N": ("d",)}
+    if hy > 1:
+        dims["H"] = ("mh",)
+    if wx > 1:
+        dims["W"] = ("mw",)
+    return Dist(f"hybrid{hy}x{wx}", dims), mesh_shape
+
+
+def predict(machine, layers, n_groups, gpus_per_sample):
+    hy, wx = SPLITS[gpus_per_sample]
+    d, ms = hybrid_dist(n_groups, hy, wx)
+    return pm.network_cost(machine, layers, [d] * len(layers), ms)["total"]
+
+
+def fit_machine(layer_fn, table, cells, group: int = 1, name="fit"):
+    """Grid-fit (efficiency, halfwork) on the given (N, p) cells only.
+
+    `group` = samples per GPU-group (1 for the mesh models: one sample
+    spread over p GPUs; 32 for ResNet Table III's 32-samples-per-group).
+    """
+    best = None
+    for eff in np.linspace(0.05, 0.8, 40):
+        for fh in np.geomspace(1e8, 2e10, 40):
+            m = dataclasses.replace(pm.LASSEN, compute_efficiency=eff,
+                                    eff_halfwork=fh)
+            err = 0.0
+            for (N, p) in cells:
+                t = table[N][p]
+                pred = predict(m, layer_fn(N), N // group, p)
+                err += (np.log(pred) - np.log(t)) ** 2
+            if best is None or err < best[0]:
+                best = (err, eff, fh)
+    _, eff, fh = best
+    return dataclasses.replace(pm.LASSEN, compute_efficiency=eff,
+                               eff_halfwork=fh, name=name)

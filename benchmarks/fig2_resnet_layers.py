@@ -1,0 +1,55 @@
+"""Paper Fig. 2: ResNet-50 layer microbenchmarks — conv1 (7x7/2, 224^2,
+3->64) and res3b_branch2a (1x1, 28^2, 512->128) under sample vs spatial
+parallelism, N in {1, 4, 32}.  Reports model-predicted FP and BP times per
+decomposition; checks the figure's qualitative claims (sample cheapest per
+comm; spatial wins for small N on the large-spatial layer; the 1x1 layer
+saturates on kernel overheads).  CSV: name,us_per_call,derived."""
+import dataclasses
+
+from benchmarks import _paper_data as D
+from repro.core import perfmodel as pm
+
+CONV1 = pm.ConvLayer("conv1", n=1, c=3, h=224, w=224, f=64, k=7, s=2)
+RES3B = pm.ConvLayer("res3b_branch2a", n=1, c=512, h=28, w=28, f=128,
+                     k=1, s=1)
+
+
+def run(csv=True):
+    m = dataclasses.replace(pm.LASSEN, compute_efficiency=0.119,
+                            eff_halfwork=1.49e9)
+    rows = []
+    checks = {}
+    for layer in (CONV1, RES3B):
+        for n in (1, 4, 32):
+            base = None
+            for p in (1, 2, 4, 8, 16):
+                if p > 1 and (layer.h % D.SPLITS[p][0] or
+                              layer.h // D.SPLITS[p][0] < layer.k):
+                    continue
+                hy, wx = D.SPLITS[p]
+                d, ms = D.hybrid_dist(1, hy, wx)
+                l = dataclasses.replace(layer, n=n)
+                c = pm.layer_cost(m, l, d, ms)
+                fp, bp = c.fp, c.bpx + c.bpw
+                if p == 1:
+                    base = fp + bp
+                rows.append((f"fig2/{layer.name}/N{n}/p{p}/fp", fp * 1e6,
+                             f"bp={bp*1e6:.1f}us "
+                             f"speedup={(base/(fp+bp)):.2f}x"))
+                checks[(layer.name, n, p)] = base / (fp + bp)
+    # paper claims: conv1 N=1 ~1.35x at 8 GPUs; res3b fwd saturates early
+    c1 = checks.get(("conv1", 1, 8), 0)
+    rows.append(("fig2/check_conv1_8gpu_speedup", c1 * 100,
+                 f"paper ~1.35x, model {c1:.2f}x"))
+    r4 = checks.get(("res3b_branch2a", 1, 4), 0)
+    r16 = checks.get(("res3b_branch2a", 1, 16), 0)
+    rows.append(("fig2/check_res3b_saturates", (r16 - r4) * 100,
+                 f"4->16 GPUs gains only {r16-r4:+.2f}x (saturation)"))
+    if csv:
+        for n_, v, d_ in rows:
+            print(f"{n_},{v:.1f},{d_}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

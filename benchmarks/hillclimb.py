@@ -1,0 +1,55 @@
+"""Reproduce the §Perf hillclimb: run baseline vs optimized variants for
+the three chosen cells and print the before/after roofline comparison.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb          # ~10 min on CPU
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+CELLS = [  # (arch, shape, optimized variant)
+    ("gemma2-9b", "train_4k", "opt"),
+    ("seamless-m4t-large-v2", "train_4k", "opt"),
+    ("olmoe-1b-7b", "train_4k", "vpz"),
+]
+OUT = "benchmarks/artifacts/dryrun"
+
+
+def run(arch, shape, variant):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", OUT]
+    if variant != "base":
+        cmd += ["--variant", variant]
+    env = dict(os.environ, PYTHONPATH="src")
+    subprocess.run(cmd, check=True, env=env, capture_output=True, text=True)
+
+
+def load(arch, shape, variant):
+    tag = f"{arch.replace('-', '_').replace('.', '_')}-{shape}-pod1"
+    if variant != "base":
+        tag += f"-{variant}"
+    with open(os.path.join(OUT, tag + ".json")) as f:
+        return json.load(f)
+
+
+def main():
+    print("cell,variant,peak_GiB,compute_ms,memory_ms,collective_ms,dominant")
+    for arch, shape, var in CELLS:
+        for v in ("base", var):
+            try:
+                d = load(arch, shape, v)
+            except FileNotFoundError:
+                run(arch, shape, v)
+                d = load(arch, shape, v)
+            r = d["roofline_s"]
+            print(f"{arch}/{shape},{v},"
+                  f"{d['per_device']['peak_bytes']/2**30:.2f},"
+                  f"{r['compute']*1e3:.1f},{r['memory']*1e3:.1f},"
+                  f"{r['collective']*1e3:.1f},{d['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

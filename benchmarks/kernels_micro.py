@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks: wall-clock of the jit'd reference paths on CPU
+(the semantic implementations the Pallas kernels must match), plus
+model-predicted TPU-v5e times for the same shapes from the roofline.
+CSV: name,us_per_call,derived."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+PEAK = 197e12
+BW = 819e9
+
+
+def _time(f, *args, iters=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run(csv=True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # conv2d: a mesh-model block-1 shard (paper hot spot)
+    x = jax.random.normal(key, (1, 130, 128, 64), jnp.float32)
+    w = jax.random.normal(key, (3, 3, 64, 64), jnp.float32) * 0.1
+    f = jax.jit(lambda x, w: ref.conv2d_ref(x, w))
+    t = _time(f, x, w)
+    flops = 2 * 128 * 126 * 64 * 9 * 64
+    rows.append(("kernel/conv2d_cpu_ref", t * 1e6,
+                 f"tpu_pred={max(flops/PEAK, 4*x.size/BW)*1e6:.1f}us"))
+    # flash attention: one ring-step tile
+    q = jax.random.normal(key, (1, 256, 16, 128), jnp.bfloat16)
+    k = jax.random.normal(key, (1, 256, 8, 128), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    t = _time(f, q, k, k)
+    flops = 4 * 256 * 256 * 16 * 128
+    rows.append(("kernel/flash_cpu_ref", t * 1e6,
+                 f"tpu_pred={max(flops/PEAK, 2*3*q.size/BW)*1e6:.1f}us"))
+    # ssd chunk
+    xdt = jax.random.normal(key, (1, 128, 24, 64), jnp.float32) * 0.5
+    la = -jax.random.uniform(key, (1, 128, 24), minval=0.01, maxval=0.5)
+    B = jax.random.normal(key, (1, 128, 128), jnp.float32) * 0.5
+    f = jax.jit(lambda a, b, c, d: ref.ssd_chunk_ref(a, b, c, d))
+    t = _time(f, xdt, la, B, B)
+    rows.append(("kernel/ssd_chunk_cpu_ref", t * 1e6, ""))
+    if csv:
+        for n, v, d in rows:
+            print(f"{n},{v:.1f},{d}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

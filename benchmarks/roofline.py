@@ -1,0 +1,106 @@
+"""Roofline report from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh): the three roofline terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS usefulness ratio, per-device memory.
+Emits the markdown tables embedded in EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--dir ...] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import registry
+
+HBM_PER_CHIP = 16 * 2 ** 30     # v5e
+
+
+def load(dir_):
+    cells = {}
+    for f in glob.glob(os.path.join(dir_, "*.json")):
+        d = json.load(open(f))
+        if not d.get("ok"):
+            continue
+        key = (d["arch"], d["shape"], d["mesh"], d.get("variant", "base"))
+        cells[key] = d
+    return cells
+
+
+def fmt_s(x):
+    return f"{x*1e3:.2f}" if x < 10 else f"{x:.2f}e3"
+
+
+def table(cells, mesh="16x16", variant="base", shapes=None, archs=None):
+    shapes = shapes or list(registry.SHAPES)
+    archs = archs or registry.ARCHS
+    rows = []
+    head = ("| arch | shape | compute ms | memory ms | collective ms | "
+            "dominant | MF ratio | GiB/dev | fits |")
+    sep = "|" + "---|" * 9
+    rows.append(head)
+    rows.append(sep)
+    for a in archs:
+        for s in shapes:
+            d = cells.get((a, s, mesh, variant))
+            if not d:
+                continue
+            r = d["roofline_s"]
+            peak = d["per_device"]["peak_bytes"]
+            mf = d.get("model_flops_ratio")
+            flag = " †" if a in registry.FULL_ATTN_500K and \
+                s == "long_500k" else ""
+            rows.append(
+                f"| {a}{flag} | {s} | {fmt_s(r['compute'])} | "
+                f"{fmt_s(r['memory'])} | {fmt_s(r['collective'])} | "
+                f"{d['dominant']} | "
+                f"{mf:.2f} |" if mf is not None else
+                f"| {a}{flag} | {s} | {fmt_s(r['compute'])} | "
+                f"{fmt_s(r['memory'])} | {fmt_s(r['collective'])} | "
+                f"{d['dominant']} | n/a |")
+            rows[-1] += f" {peak/2**30:.2f} | " \
+                        f"{'yes' if peak <= HBM_PER_CHIP else 'NO'} |"
+    return "\n".join(rows)
+
+
+def summary(cells, variant="base"):
+    """Pick hillclimb candidates: worst roofline fraction (most total time
+    per useful model flop), most collective-bound, representative."""
+    scored = []
+    for (a, s, mesh, v), d in cells.items():
+        if mesh != "16x16" or v != variant or a in registry.CNN_ARCHS:
+            continue
+        r = d["roofline_s"]
+        total = sum(r.values())
+        bound = max(r, key=r.get)
+        coll_frac = r["collective"] / max(total, 1e-12)
+        mf = d.get("model_flops_ratio", 0)
+        scored.append((a, s, total, bound, coll_frac, mf,
+                       d["per_device"]["peak_bytes"] / 2 ** 30))
+    scored.sort(key=lambda t: -t[2])
+    return scored
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--variant", default="base")
+    args = ap.parse_args()
+    cells = load(args.dir)
+    print(f"# single-pod (16x16) roofline — variant={args.variant}\n")
+    print(table(cells, "16x16", args.variant))
+    print(f"\n# multi-pod (2x16x16)\n")
+    print(table(cells, "2x16x16", args.variant))
+    print("\n# CNN (paper's own workloads)\n")
+    print(table(cells, "16x16", args.variant, shapes=["cnn"],
+                archs=registry.CNN_ARCHS))
+    print("\n# hillclimb candidates (sorted by total roofline time)\n")
+    for a, s, total, bound, cf, mf, gib in summary(cells, args.variant)[:10]:
+        print(f"  {a:24s} {s:12s} total={total*1e3:8.1f}ms bound={bound:10s}"
+              f" coll_frac={cf:.2f} mf_ratio={mf:.2f} {gib:.1f}GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark harness: one function per paper table/figure + kernel micro +
+roofline summary.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+
+
+def main() -> None:
+    from benchmarks import (fig2_resnet_layers, fig3_mesh_layers,
+                            kernels_micro, table1_mesh1k, table2_mesh2k,
+                            table3_resnet50)
+    print("name,us_per_call,derived")
+    table1_mesh1k.run()
+    table2_mesh2k.run()
+    table3_resnet50.run()
+    fig2_resnet_layers.run()
+    fig3_mesh_layers.run()
+    kernels_micro.run()
+    # roofline summary from dry-run artifacts (if present)
+    try:
+        import os
+        from benchmarks import roofline
+        cells = roofline.load("benchmarks/artifacts/dryrun")
+        for (a, s, mesh, v), d in sorted(cells.items()):
+            if v != "base":
+                continue
+            r = d["roofline_s"]
+            dom = d["dominant"]
+            print(f"roofline/{a}/{s}/{mesh},{r[dom]*1e6:.1f},"
+                  f"dominant={dom} mf_ratio="
+                  f"{d.get('model_flops_ratio', float('nan')):.2f}")
+    except Exception as e:  # artifacts not generated yet
+        print(f"roofline/skipped,0,{type(e).__name__}")
+
+
+if __name__ == '__main__':
+    main()

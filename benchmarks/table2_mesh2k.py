@@ -1,0 +1,33 @@
+"""Paper Table II: 2K mesh-model strong scaling (baseline 2 GPUs/sample —
+pure sample parallelism exceeds GPU memory, the paper's memory headline).
+Per-model calibration on (N=2,p=2) + (N=2,p=16); predict the other cells.
+CSV: name,us_per_call,derived."""
+import numpy as np
+
+from benchmarks import _paper_data as D
+from repro.models.cnn import meshnet
+
+
+def run(csv=True):
+    layer_fn = lambda n: meshnet.layer_specs(meshnet.MESH2K, n)
+    m = D.fit_machine(layer_fn, D.TABLE2, [(2, 2), (2, 16)], group=1,
+                      name="lassen-mesh2k")
+    rows, errs = [], []
+    for N, row in D.TABLE2.items():
+        for p, t in row.items():
+            pred = D.predict(m, layer_fn(N), N, p)
+            err = pred / t - 1
+            if (N, p) not in [(2, 2), (2, 16)]:
+                errs.append(abs(err))
+            rows.append((f"table2/N{N}/p{p}", pred * 1e6,
+                         f"paper={t*1e6:.0f}us err={err*100:+.1f}%"))
+    rows.append(("table2/mean_abs_err_heldout", np.mean(errs) * 1e2,
+                 f"eff={m.compute_efficiency:.3f} Fh={m.eff_halfwork:.2e}"))
+    if csv:
+        for n, v, d in rows:
+            print(f"{n},{v:.1f},{d}")
+    return rows, np.mean(errs)
+
+
+if __name__ == "__main__":
+    run()

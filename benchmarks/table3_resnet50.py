@@ -1,0 +1,43 @@
+"""Paper Table III: ResNet-50 strong scaling — sample (32 samples/GPU) vs
+hybrid sample+spatial (32 samples / 2 or 4 GPUs).  Calibrate on
+(N=128, sample) + (N=128, hybrid4); predict the rest.  The headline claims
+to reproduce: ~1.4x speedup at 2x GPUs, ~1.5-1.8x at 4x GPUs.
+CSV: name,us_per_call,derived."""
+import numpy as np
+
+from benchmarks import _paper_data as D
+from repro.models.cnn import resnet
+
+
+def run(csv=True):
+    layer_fn = lambda n: resnet.layer_specs(n)
+    m = D.fit_machine(layer_fn, D.TABLE3, [(128, 1), (128, 4)], group=32,
+                      name="lassen-resnet50")
+    rows, errs, speeds = [], [], {2: [], 4: []}
+    for N, row in D.TABLE3.items():
+        base = None
+        for p, t in row.items():
+            pred = D.predict(m, layer_fn(N), N // 32, p)
+            err = pred / t - 1
+            if (N, p) not in [(128, 1), (128, 4)]:
+                errs.append(abs(err))
+            if p == 1:
+                base = pred
+            elif base:
+                speeds[p].append(base / pred)
+            rows.append((f"table3/N{N}/{'sample' if p == 1 else f'hyb{p}'}",
+                         pred * 1e6,
+                         f"paper={t*1e6:.0f}us err={err*100:+.1f}%"))
+    for p, s in speeds.items():
+        rows.append((f"table3/speedup_hybrid{p}", np.mean(s) * 100,
+                     f"predicted {np.mean(s):.2f}x vs paper ~"
+                     f"{'1.4x' if p == 2 else '1.5-1.8x'}"))
+    rows.append(("table3/mean_abs_err_heldout", np.mean(errs) * 1e2, ""))
+    if csv:
+        for n, v, d in rows:
+            print(f"{n},{v:.1f},{d}")
+    return rows, np.mean(errs)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Batched LM serving with a sequence-sharded KV cache (the paper's spatial
+decomposition applied to inference): prefill a batch of prompts with ring
+attention, then greedy-decode with flash-decoding-style partial-softmax
+merges across the sequence shards.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax                  # noqa: E402
+import jax.numpy as jnp     # noqa: E402
+import numpy as np          # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import registry                         # noqa: E402
+from repro.launch import shardings as SH                   # noqa: E402
+from repro.launch.mesh import make_mesh                    # noqa: E402
+from repro.models.lm import transformer as T               # noqa: E402
+from repro.models.lm.modules import ShardCtx               # noqa: E402
+
+mesh = make_mesh(data=2, model=4)
+ctx = ShardCtx(mesh=mesh, seq_axis="model", batch_axes=("data",))
+cfg = registry.get("qwen1_5_0_5b", smoke=True)
+params = T.init(jax.random.PRNGKey(0), cfg)
+
+B, PROMPT, GEN = 2, 16, 12
+MAXLEN = ((PROMPT + GEN + 3) // 4) * 4     # multiple of the seq shards
+rng = np.random.default_rng(0)
+prompts = jnp.asarray(rng.integers(1, cfg.vocab, (B, PROMPT), np.int32))
+
+with mesh:
+    # empty sharded cache; replay the prompt through the decode path, then
+    # generate.  (Bulk prefill via T.prefill exercises ring attention.)
+    caches = T.init_decode_state(params, cfg, B, MAXLEN, jnp.float32)
+    cspecs = SH.kv_cache_specs(caches, mesh, True, "model")
+    caches = jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        caches, cspecs)
+    decode = jax.jit(lambda p, t, c, L: T.decode_step(p, cfg, t, c, L, ctx),
+                     donate_argnums=(2,))
+    tok = prompts[:, :1]
+    generated = []
+    for i in range(PROMPT + GEN - 1):
+        logits, caches = decode(params, tok, caches, jnp.int32(i))
+        if i + 1 < PROMPT:
+            tok = prompts[:, i + 1:i + 2]
+        else:
+            tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+            generated.append(np.asarray(tok)[:, 0])
+
+print(f"served batch={B} on mesh {dict(mesh.shape)} "
+      f"(KV cache sharded over 'model')")
+print("generated ids:\n", np.stack(generated, 1))

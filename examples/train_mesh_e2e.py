@@ -1,0 +1,80 @@
+"""End-to-end training driver: a scaled mesh-tangling model (the paper's
+workload family, ~21M params like the paper's own 1K model) trained for a
+few hundred steps through the production path — prefetching pipeline,
+mixed-precision train step, async checkpointing, resilient loop.
+
+CPU note: the full 1024^2 model is a multi-hour CPU job; the default here
+is the same network at 128^2 inputs (identical depth/widths => identical
+parameter count, 1/64 the pixels).  Pass --full for the paper's 1K config,
+--steps to change length.
+
+  PYTHONPATH=src python examples/train_mesh_e2e.py [--steps 300] [--full]
+"""
+import argparse
+import functools
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.core.spatial_conv import ConvSharding
+from repro.data.pipeline import Prefetcher, synthetic_mesh_batch
+from repro.models.cnn import meshnet
+from repro.optim.optimizer import sgd, warmup_cosine
+from repro.runtime.fault_tolerance import ResilientLoop, StragglerMonitor
+from repro.train.train_loop import TrainStepConfig, make_train_step
+from repro.utils import FP32, human_count, tree_num_params
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=2)
+ap.add_argument("--full", action="store_true",
+                help="paper's true 1024^2 input size")
+args = ap.parse_args()
+
+hw = 1024 if args.full else 128
+cfg = meshnet.MeshNetConfig("mesh-e2e", input_hw=hw, in_channels=18,
+                            convs_per_block=3)
+params = meshnet.init(jax.random.PRNGKey(0), cfg)
+print(f"{cfg.name}: {human_count(tree_num_params(params))} params "
+      f"(paper's 1K-model family), input {hw}^2 x 18")
+
+loss = functools.partial(meshnet.loss_fn, cfg=cfg, shardings=ConvSharding())
+opt = sgd(warmup_cosine(0.02, 20, args.steps), momentum=0.9)
+
+
+class _NoMesh:
+    axis_names = ()
+
+
+tstep = make_train_step(lambda p, b: loss(p, b), opt, _NoMesh(),
+                        TrainStepConfig(precision=FP32))
+ck = CheckpointManager(tempfile.mkdtemp(), keep=2, async_save=True)
+pf = Prefetcher(lambda s: synthetic_mesh_batch(
+    s, args.batch, hw, 18, out_hw=cfg.out_hw))
+state = (params, opt.init(params), None)
+t0 = time.time()
+hist = []
+
+
+def make_step():
+    def run(state, step):
+        p, o, ef = state
+        b = {k: jnp.asarray(v) for k, v in next(pf).items()}
+        p, o, ef, m = tstep(p, o, ef, b)
+        hist.append(float(m["loss"]))
+        if step % 20 == 0:
+            print(f"step {step:4d} loss {hist[-1]:.4f} "
+                  f"({(time.time()-t0)/(len(hist)):.2f}s/step)")
+        return (p, o, ef), m
+    return run
+
+
+loop = ResilientLoop(ckpt=ck, make_step=make_step, ckpt_every=100)
+state, step, _ = loop.run(state, 0, args.steps, monitor=StragglerMonitor())
+pf.close()
+print(f"trained {step} steps in {time.time()-t0:.0f}s; "
+      f"loss {hist[0]:.4f} -> {hist[-1]:.4f}")
+assert hist[-1] < hist[0]

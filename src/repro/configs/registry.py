@@ -1,0 +1,50 @@
+"""Architecture registry: `get(name)` -> config; `--arch <id>` everywhere.
+
+Each assigned architecture lives in src/repro/configs/<id>.py exposing
+CONFIG (full size, dry-run only) and SMOKE (reduced same-family config for
+CPU tests).  The paper's own models (resnet50, mesh1k, mesh2k) register too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCHS = [
+    "gemma2_9b", "qwen2_5_14b", "qwen1_5_0_5b", "olmo_1b", "mixtral_8x7b",
+    "olmoe_1b_7b", "hymba_1_5b", "pixtral_12b", "mamba2_780m",
+    "seamless_m4t_large_v2",
+]
+CNN_ARCHS = ["resnet50", "mesh1k", "mesh2k"]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS + CNN_ARCHS}
+_ALIASES.update({
+    "gemma2-9b": "gemma2_9b", "qwen2.5-14b": "qwen2_5_14b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b", "olmo-1b": "olmo_1b",
+    "mixtral-8x7b": "mixtral_8x7b", "olmoe-1b-7b": "olmoe_1b_7b",
+    "hymba-1.5b": "hymba_1_5b", "pixtral-12b": "pixtral_12b",
+    "mamba2-780m": "mamba2_780m",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+})
+
+# shape cells assigned to the LM family (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+# archs whose 500K-token *prefill* is quadratic (pure full attention at
+# long range); their long_500k decode cell is lowered but flagged —
+# DESIGN.md §Arch-applicability.
+FULL_ATTN_500K = {"qwen2_5_14b", "qwen1_5_0_5b", "olmo_1b", "olmoe_1b_7b",
+                  "pixtral_12b", "seamless_m4t_large_v2"}
+
+
+def canon(name: str) -> str:
+    return _ALIASES.get(name, name)
+
+
+def get(name: str, smoke: bool = False):
+    mod = importlib.import_module(f"repro.configs.{canon(name)}")
+    return mod.SMOKE if smoke else mod.CONFIG

@@ -1,0 +1,80 @@
+"""Halo exchange — the paper's core communication primitive (§III-A, §IV).
+
+A tensor dimension is block-partitioned across a named mesh axis; each shard
+needs `lo` trailing rows of its predecessor and `hi` leading rows of its
+successor (a stencil halo).  On TPU this lowers to `collective-permute` on the
+ICI torus — the native neighbor-exchange pattern.
+
+``jax.lax.ppermute`` fills shards that receive nothing with zeros, which
+implements the paper's "same" zero padding at the global boundary for free
+(Eq. 1's out-of-range indices).
+
+These functions must be called inside ``shard_map`` (they use collectives on
+`axis_name`).  They are fully differentiable: the VJP of ppermute is ppermute
+with the inverted permutation, so autodiff produces exactly the paper's
+backward halo pattern (halo exchange on dL/dy, send-back-and-accumulate of
+boundary gradients).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _fwd_perm(n: int):  # shard i -> i+1  (send my tail downward)
+    return [(i, i + 1) for i in range(n - 1)]
+
+
+def _bwd_perm(n: int):  # shard i -> i-1  (send my head upward)
+    return [(i + 1, i) for i in range(n - 1)]
+
+
+def halo_slices(x, dim: int, lo: int, hi: int, axis_name: str, axis_size: int):
+    """Return (halo_lo, halo_hi) received from the neighbor shards.
+
+    halo_lo: the last `lo` rows of the predecessor shard (zeros on shard 0).
+    halo_hi: the first `hi` rows of the successor shard (zeros on the last).
+    Either may be None when the corresponding width is 0.
+    """
+    halo_lo = halo_hi = None
+    if lo > 0:
+        tail = lax.slice_in_dim(x, x.shape[dim] - lo, x.shape[dim], axis=dim)
+        halo_lo = lax.ppermute(tail, axis_name, _fwd_perm(axis_size))
+    if hi > 0:
+        head = lax.slice_in_dim(x, 0, hi, axis=dim)
+        halo_hi = lax.ppermute(head, axis_name, _bwd_perm(axis_size))
+    return halo_lo, halo_hi
+
+
+def halo_exchange(x, dim: int, lo: int, hi: int, axis_name: str,
+                  axis_size: int, edge_value: float = 0.0):
+    """Extend local block `x` along `dim` with its halo: (lo + local + hi).
+
+    `edge_value` is the fill at the *global* boundary (shard 0's lo-halo and
+    the last shard's hi-halo).  ppermute already yields zeros there; for a
+    non-zero fill (e.g. -inf for max pooling) the edge shards overwrite it.
+    """
+    halo_lo, halo_hi = halo_slices(x, dim, lo, hi, axis_name, axis_size)
+    if halo_lo is not None and edge_value:
+        idx = lax.axis_index(axis_name)
+        halo_lo = jnp.where(idx == 0, jnp.full_like(halo_lo, edge_value),
+                            halo_lo)
+    if halo_hi is not None and edge_value:
+        idx = lax.axis_index(axis_name)
+        halo_hi = jnp.where(idx == axis_size - 1,
+                            jnp.full_like(halo_hi, edge_value), halo_hi)
+    parts = [p for p in (halo_lo, x, halo_hi) if p is not None]
+    if len(parts) == 1:
+        return x
+    return lax.concatenate(parts, dimension=dim)
+
+
+def ring_shift(x, axis_name: str, axis_size: int, reverse: bool = False):
+    """Full ring rotation (used by ring attention): shard i's block moves to
+    shard i+1 (mod n).  Unlike the stencil halo this wraps around."""
+    if reverse:
+        perm = [(i, (i - 1) % axis_size) for i in range(axis_size)]
+    else:
+        perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+    return lax.ppermute(x, axis_name, perm)

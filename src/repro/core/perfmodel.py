@@ -1,0 +1,348 @@
+"""Performance model for parallel CNN/transformer training (paper §V).
+
+Structure mirrors the paper exactly:
+
+  * compute: C(n,c,h,w,f), Cw(...), Cx(...) — per-layer local runtimes.  The
+    paper times cuDNN empirically; we use an analytic FLOP/byte roofline with
+    a calibratable efficiency term, plus an `EmpiricalTable` hook so measured
+    timings (the paper's method) can be dropped in when hardware is at hand.
+  * communication: linear α-β model (§II-B); collectives per Thakur et al. —
+    the allreduce picks the min over ring / recursive-doubling / Rabenseifner
+    exactly like MPICH's size-based algorithm selection.
+  * layer cost (§V-A):  Cost_D(ℓ) = FP + BPx + BPw + BPa, with halo SR terms
+    when H/W are partitioned and overlap adjustments (§IV-A).
+  * network cost (§V-B): Σ layer costs + Shuffle(D_i, D_j) redistribution on
+    distribution changes + greedy one-at-a-time allreduce/backprop overlap.
+
+Units: seconds, bytes, FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Mapping, Sequence
+
+from repro.core.distribution import Dist
+from repro.utils import cdiv
+
+
+# ---------------------------------------------------------------------------
+# machines
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    name: str
+    peak_flops: float          # per device, training dtype
+    mem_bw: float              # HBM bytes/s
+    alpha: float               # p2p latency, s (halo-scale messages)
+    beta: float                # p2p inverse bandwidth, s/byte (per link)
+    alpha_coll: float          # latency for collective steps
+    beta_coll: float           # inverse bandwidth on the allreduce fabric
+    wordsize: int = 4
+    # fraction of peak a well-shaped conv/matmul reaches; the calibration
+    # hook (EmpiricalTable / calibrate_efficiency) can override per layer.
+    compute_efficiency: float = 0.55
+    # half-performance work (FLOPs): achieved efficiency for a kernel with
+    # local work `fl` is eff·fl/(fl + eff_halfwork) — the empirical
+    # small-kernel saturation the paper captures by measuring cuDNN
+    # directly ("local convolution kernels not scaling linearly", §VI-B1).
+    eff_halfwork: float = 0.0
+
+
+# Lassen (paper's machine): V100 fp32 ~15.7 TF; NVLINK2 ~150 GB/s/dir
+# on-node, dual-rail EDR IB ~ 2x12.5 GB/s across nodes.  Halo exchanges in
+# the paper's large runs cross nodes (8/16-way spatial), so p2p constants
+# use the IB path; allreduces are NCCL ring across everything (IB-bound).
+LASSEN = Machine("lassen-v100", peak_flops=15.7e12, mem_bw=900e9,
+                 alpha=4.0e-6, beta=1 / 21.0e9,
+                 alpha_coll=6.0e-6, beta_coll=1 / 21.0e9, wordsize=4,
+                 compute_efficiency=0.50)
+
+# TPU v5e (the build target): constants given by the assignment.
+TPU_V5E = Machine("tpu-v5e", peak_flops=197e12, mem_bw=819e9,
+                  alpha=1.0e-6, beta=1 / 50.0e9,
+                  alpha_coll=1.0e-6, beta_coll=1 / 50.0e9, wordsize=2,
+                  compute_efficiency=0.55)
+
+
+# ---------------------------------------------------------------------------
+# communication (paper §II-B; Thakur et al. collectives)
+# ---------------------------------------------------------------------------
+
+def sr_time(m: Machine, nbytes: float) -> float:
+    """SR(n): send+receive n bytes between two processors (full duplex)."""
+    if nbytes <= 0:
+        return 0.0
+    return m.alpha + m.beta * nbytes
+
+
+def allreduce_time(m: Machine, p: int, nbytes: float) -> float:
+    """AR(p, n): MPICH-style min over candidate algorithms (Thakur et al.)."""
+    if p <= 1 or nbytes <= 0:
+        return 0.0
+    lg = math.log2(p)
+    ring = 2 * (p - 1) * m.alpha_coll + 2 * (p - 1) / p * nbytes * m.beta_coll
+    rec_dbl = math.ceil(lg) * (m.alpha_coll + nbytes * m.beta_coll)
+    rabens = 2 * math.ceil(lg) * m.alpha_coll \
+        + 2 * (p - 1) / p * nbytes * m.beta_coll
+    return min(ring, rec_dbl, rabens)
+
+
+def reduce_scatter_time(m: Machine, p: int, nbytes: float) -> float:
+    if p <= 1 or nbytes <= 0:
+        return 0.0
+    return (p - 1) * m.alpha_coll + (p - 1) / p * nbytes * m.beta_coll
+
+
+def all_gather_time(m: Machine, p: int, nbytes: float) -> float:
+    return reduce_scatter_time(m, p, nbytes)
+
+
+def all_to_all_time(m: Machine, p: int, nbytes_local: float) -> float:
+    """Each processor exchanges its local block with everyone (pairwise)."""
+    if p <= 1 or nbytes_local <= 0:
+        return 0.0
+    return (p - 1) * m.alpha + (p - 1) / p * nbytes_local * m.beta
+
+
+# ---------------------------------------------------------------------------
+# layer specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    """One conv (or conv-like) layer: N samples, C->F channels, HxW, KxK/S."""
+    name: str
+    n: int; c: int; h: int; w: int; f: int
+    k: int = 3
+    s: int = 1
+    kind: str = "conv"           # conv | pool | fc(=1x1 on 1x1) | bn ...
+
+    @property
+    def h_out(self) -> int: return cdiv(self.h, self.s)
+    @property
+    def w_out(self) -> int: return cdiv(self.w, self.s)
+    @property
+    def o(self) -> int: return self.k // 2
+
+    def flops_fwd(self) -> float:
+        if self.kind == "pool":
+            return self.n * self.f * self.h_out * self.w_out * self.k ** 2
+        return 2.0 * self.n * self.c * self.h_out * self.w_out \
+            * self.k ** 2 * self.f
+
+    def weight_words(self) -> float:
+        return 0.0 if self.kind == "pool" else self.k ** 2 * self.c * self.f
+
+    def act_words(self) -> float:          # output activation size
+        return self.n * self.f * self.h_out * self.w_out
+
+
+class EmpiricalTable:
+    """Optional measured-runtime lookup, the paper's own methodology: keys
+    (kind, n, c, h, w, f, k, s) -> seconds.  Falls back to the analytic
+    model for missing entries."""
+
+    def __init__(self, entries: Mapping[tuple, float] | None = None):
+        self.entries = dict(entries or {})
+
+    def lookup(self, layer: ConvLayer, n, c, h, w, f) -> float | None:
+        return self.entries.get((layer.kind, n, c, h, w, f, layer.k, layer.s))
+
+
+def conv_compute_time(m: Machine, layer: ConvLayer, n, c, h, w, f,
+                      table: EmpiricalTable | None = None,
+                      eff: float | None = None) -> float:
+    """C(n,c,h,w,f): local forward runtime on the per-processor shard."""
+    if table is not None:
+        t = table.lookup(layer, n, c, h, w, f)
+        if t is not None:
+            return t
+    if n <= 0 or h <= 0 or w <= 0:
+        return 0.0
+    h_out, w_out = cdiv(h, layer.s), cdiv(w, layer.s)
+    if layer.kind == "pool":
+        flops = n * f * h_out * w_out * layer.k ** 2
+        byts = (n * c * h * w + n * f * h_out * w_out) * m.wordsize
+        return max(flops / (0.05 * m.peak_flops), byts / m.mem_bw) + 2e-6
+    flops = 2.0 * n * c * h_out * w_out * layer.k ** 2 * f
+    byts = (n * c * h * w + n * f * h_out * w_out
+            + layer.k ** 2 * c * f) * m.wordsize
+    e = eff if eff is not None else m.compute_efficiency
+    if m.eff_halfwork > 0:
+        e = e * flops / (flops + m.eff_halfwork)
+    # roofline max(compute, memory) + a fixed kernel-launch overhead; the
+    # launch overhead is what caps strong scaling of tiny local convs
+    # (paper Fig. 2, res3b fwd) — without it the model is wildly optimistic.
+    return max(flops / (e * m.peak_flops), byts / m.mem_bw) + 4e-6
+
+
+# ---------------------------------------------------------------------------
+# layer cost under a distribution (paper §V-A)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LayerCost:
+    fp: float = 0.0
+    bpx: float = 0.0
+    bpw: float = 0.0
+    bpa: float = 0.0          # dL/dw allreduce (overlappable, §V-B)
+    fp_compute: float = 0.0   # components, for the overlap simulation
+    bp_compute: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.fp + self.bpx + self.bpw + self.bpa
+
+
+def _halo_time(m: Machine, o: int, n_l: int, c_l: int, h_l: int, w_l: int,
+               h_split: bool, w_split: bool) -> float:
+    """2 SR(O·n·c·w) + 2 SR(O·n·c·h) + 4 SR(O²·n·c) as applicable (§V-A)."""
+    if o == 0:
+        return 0.0
+    t = 0.0
+    ws = m.wordsize
+    if h_split:
+        t += 2 * sr_time(m, o * n_l * c_l * w_l * ws)
+    if w_split:
+        t += 2 * sr_time(m, o * n_l * c_l * h_l * ws)
+    if h_split and w_split:
+        t += 4 * sr_time(m, o * o * n_l * c_l * ws)
+    return t
+
+
+def layer_cost(m: Machine, layer: ConvLayer, dist: Dist,
+               mesh_shape: Mapping[str, int],
+               table: EmpiricalTable | None = None,
+               overlap: bool = True,
+               eff: float | None = None) -> LayerCost:
+    """Cost_D(ℓ) (§V-A).  `mesh_shape` maps mesh axis -> size."""
+    n_l = layer.n // max(dist.ways("N", mesh_shape), 1)
+    h_l = layer.h // max(dist.ways("H", mesh_shape), 1)
+    w_l = layer.w // max(dist.ways("W", mesh_shape), 1)
+    c_l = layer.c // max(dist.ways("C", mesh_shape), 1)
+    f_l = layer.f // max(dist.ways("F", mesh_shape), 1)
+    h_split = dist.ways("H", mesh_shape) > 1
+    w_split = dist.ways("W", mesh_shape) > 1
+
+    c = LayerCost()
+    # Channel/filter parallelism (§III-D) is costed as the single-axis
+    # scheme where x enters C-sharded, each processor contracts its channel
+    # block against full-F weight rows, and a reduce-scatter over the group
+    # completes the channel sum leaving y F-sharded (the conv analogue of
+    # Megatron row-parallel): compute sees (c_l, full f), comm is RS(y).
+    p_c = dist.ways("C", mesh_shape)
+    p_f = dist.ways("F", mesh_shape)
+    h_out_l = layer.h_out // max(dist.ways("H", mesh_shape), 1)
+    w_out_l = layer.w_out // max(dist.ways("W", mesh_shape), 1)
+    f_fwd = layer.f if p_c > 1 else f_l
+    fp_comp = conv_compute_time(m, layer, n_l, c_l, h_l, w_l, f_fwd, table,
+                                eff)
+    halo_x = _halo_time(m, layer.o, n_l, c_l, h_l, w_l, h_split, w_split)
+    if p_c > 1:
+        halo_x += reduce_scatter_time(
+            m, p_c, n_l * layer.f * h_out_l * w_out_l * m.wordsize)
+    c.fp_compute = fp_comp
+    c.fp = max(fp_comp, halo_x) if overlap else fp_comp + halo_x
+
+    if layer.kind == "pool":
+        # backward pool ~ forward pool cost; halo on the error signal.
+        c.bpx = max(fp_comp, halo_x) if overlap else fp_comp + halo_x
+        c.bp_compute = fp_comp
+        return c
+
+    # BPx: halo on dL/dy (F channels) + data-conv compute; under filter
+    # parallelism the sum over f ∈ I_F^(p) (Eq. 3) is completed with a
+    # reduce-scatter across the F-group, mirroring the forward.
+    c_bpx = layer.c if p_f > 1 else c_l
+    bpx_comp = conv_compute_time(m, layer, n_l, c_bpx, h_l, w_l, f_l, table,
+                                 eff)
+    halo_dy = _halo_time(m, layer.o, n_l, f_l, h_l, w_l, h_split, w_split)
+    if p_f > 1:
+        halo_dy += reduce_scatter_time(
+            m, p_f, n_l * layer.c * h_l * w_l * m.wordsize)
+    # BPw: local filter-gradient contraction, needs no halo (§IV-A); under
+    # CF parallelism it needs full-F dL/dy — an all-gather over the group.
+    bpw_comp = conv_compute_time(m, layer, n_l, c_l, h_l, w_l, f_fwd, table,
+                                 eff)
+    if p_f > 1:
+        bpw_comp += all_gather_time(
+            m, p_f, n_l * layer.f * h_out_l * w_out_l * m.wordsize)
+    if overlap:
+        # §IV-A: the dL/dx halo exchange hides inside the dL/dw conv.
+        c.bpx = bpx_comp
+        c.bpw = max(bpw_comp, halo_dy)
+    else:
+        c.bpx = bpx_comp + halo_dy
+        c.bpw = bpw_comp
+    c.bp_compute = bpx_comp + bpw_comp
+
+    # BPa: allreduce of dL/dw over processors sharing the same (C, F)
+    # indices — all of them when weights are replicated (§V-A).
+    p_total = 1
+    for ax, sz in mesh_shape.items():
+        p_total *= sz
+    p_cf = dist.ways("C", mesh_shape) * dist.ways("F", mesh_shape)
+    p_ar = p_total // max(p_cf, 1)
+    c.bpa = allreduce_time(m, p_ar,
+                           f_l * c_l * layer.k ** 2 * m.wordsize)
+    return c
+
+
+def shuffle_time(m: Machine, layer: ConvLayer, d_i: Dist, d_j: Dist,
+                 mesh_shape: Mapping[str, int]) -> float:
+    """Shuffle(D_i, D_j): all-to-all redistribution of ℓ's output (§III-C)."""
+    if d_i.same_as(d_j):
+        return 0.0
+    p = 1
+    for ax, sz in mesh_shape.items():
+        p *= sz
+    local_bytes = layer.act_words() / p * m.wordsize
+    # forward shuffle of y and backward shuffle of dL/dx
+    return 2 * all_to_all_time(m, p, local_bytes)
+
+
+# ---------------------------------------------------------------------------
+# whole-network cost (paper §V-B)
+# ---------------------------------------------------------------------------
+
+def network_cost(m: Machine, layers: Sequence[ConvLayer],
+                 dists: Sequence[Dist], mesh_shape: Mapping[str, int],
+                 table: EmpiricalTable | None = None,
+                 overlap: bool = True,
+                 eff: float | None = None) -> dict:
+    """End-to-end mini-batch time for a line network under per-layer dists.
+
+    Greedy allreduce overlap (§V-B): walking backprop from the last layer,
+    each dL/dw allreduce starts when (a) its layer's backprop is done and
+    (b) the previous allreduce finished (one at a time); it runs concurrent
+    with the remaining backprop compute.  The mini-batch ends when both the
+    compute timeline and the last allreduce finish.
+    """
+    assert len(layers) == len(dists)
+    costs = [layer_cost(m, l, d, mesh_shape, table, overlap, eff)
+             for l, d in zip(layers, dists)]
+
+    fp_time = sum(c.fp for c in costs)
+    shuf = sum(shuffle_time(m, layers[i], dists[i], dists[i + 1], mesh_shape)
+               for i in range(len(layers) - 1))
+
+    # backward timeline with greedy allreduce overlap
+    t = 0.0          # compute-stream clock
+    ar_free = 0.0    # when the collective stream is free
+    ar_end = 0.0
+    for c in reversed(costs):
+        t += c.bpx + c.bpw
+        if c.bpa > 0:
+            start = max(t, ar_free)
+            ar_free = start + c.bpa
+            ar_end = ar_free
+    bp_time = max(t, ar_end) if overlap else \
+        sum(c.bpx + c.bpw + c.bpa for c in costs)
+
+    return {"total": fp_time + shuf + bp_time, "fp": fp_time,
+            "bp": bp_time, "shuffle": shuf,
+            "exposed_allreduce": max(0.0, ar_end - t) if overlap else
+            sum(c.bpa for c in costs),
+            "per_layer": costs}

@@ -1,0 +1,48 @@
+"""Sequence-parallel state-space recurrence — the paper's halo exchange in
+its purest transformer-era form.
+
+A (chunked) SSM layer on a sequence-sharded tensor needs exactly one piece of
+remote data per shard: the recurrent state flowing in across the left
+boundary — a single (B, heads, d_head, d_state) tensor.  That is a
+constant-width halo, the direct analogue of the paper's O-row conv halo.
+
+Each shard locally reduces its chunk to a (decay, state-contribution)
+summary (A, S); the state entering shard p is the *exclusive prefix* under
+the associative combine (x before y):
+
+    (A_x, S_x) ∘ (A_y, S_y) = (A_x·A_y,  S_x·A_y + S_y)
+
+computed across the mesh axis in ceil(log2 P) ppermute rounds (Hillis-Steele
+over ICI neighbors).  The paper's 1-D conv halo costs one SR(n); this costs
+log2(P)·SR(n) once per layer — still negligible next to the matmul work.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def seq_prefix_state(a_total, s_local, axis_name: str, axis_size: int):
+    """Exclusive prefix combine of per-shard (decay, state) summaries.
+
+    a_total: total decay across the local chunk, broadcastable to s_local
+             (e.g. (B, H, 1, 1)).
+    s_local: state contributed by the local chunk alone (B, H, dh, ds).
+    Returns s_in — the recurrent state entering this shard (zeros on shard 0).
+    """
+    a_inc, s_inc = a_total, s_local
+    d = 1
+    while d < axis_size:
+        perm = [(i, i + d) for i in range(axis_size - d)]
+        a_recv = lax.ppermute(a_inc, axis_name, perm)   # prefix ending at i-d
+        s_recv = lax.ppermute(s_inc, axis_name, perm)   # (zeros when i < d)
+        idx = lax.axis_index(axis_name)
+        has = idx >= d
+        # S[i] <- S[i-d]·A[i] + S[i]  (use OLD a_inc before updating it)
+        s_inc = jnp.where(has, s_recv * a_inc + s_inc, s_inc)
+        a_inc = jnp.where(has, a_recv * a_inc, a_inc)
+        d *= 2
+    # exclusive shift: shard p receives the inclusive prefix of p-1;
+    # shard 0 receives zeros = the correct zero initial state.
+    perm = [(i, i + 1) for i in range(axis_size - 1)]
+    return lax.ppermute(s_inc, axis_name, perm)

@@ -1,0 +1,272 @@
+"""Distributed-memory convolution with spatial decomposition (paper §III).
+
+The input tensor (NHWC) is block-partitioned: N over the data axes (sample
+parallelism), H — and optionally W — over mesh axes (spatial parallelism).
+Forward convolution needs a stencil halo of the neighbor shards' boundary
+rows (paper Eq. 1 with restricted index sets); the halo exchange lowers to
+``collective-permute`` on the TPU ICI torus.
+
+Backpropagation is obtained by autodiff *through* the shard-local program:
+the VJP of ``ppermute`` is the inverted ``ppermute``, so dL/dx receives
+exactly the paper's halo exchange on dL/dy (Eq. 3) plus boundary-gradient
+accumulation, and dL/dw is the local contraction (Eq. 2) completed by the
+``psum`` that shard_map inserts for the replicated-weight cotangent — i.e.
+the paper's allreduce.
+
+Overlap (paper §IV-A): with ``overlap=True`` the local conv is split into an
+interior block that depends only on local data and two boundary blocks that
+consume the halo.  This makes the halo exchange and the interior convolution
+*independent in dataflow*, which is what allows XLA's latency-hiding
+scheduler to run the collective-permute concurrently with the interior conv
+on TPU (the JAX analogue of the paper's separate cuDNN calls on interior and
+boundary domains).  The same split in the transposed program hides the
+dL/dx halo under the dL/dw contraction, which needs no halo (§IV-A).
+
+All functions replicate single-device convolution exactly (up to float
+accumulation order), as the paper requires.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import halo as halo_lib
+from repro.utils import cdiv, same_pads
+
+DIMNUMS = ("NHWC", "HWIO", "NHWC")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSharding:
+    """Distribution descriptor for a conv/pool layer (paper's D).
+
+    batch_axes: mesh axes sharding N (sample parallelism).
+    h_axis / w_axis: mesh axes sharding H / W (spatial parallelism), or None.
+    """
+    batch_axes: tuple[str, ...] = ()
+    h_axis: str | None = None
+    w_axis: str | None = None
+
+    @property
+    def is_spatial(self) -> bool:
+        return self.h_axis is not None or self.w_axis is not None
+
+    def x_spec(self) -> P:
+        return P(self.batch_axes or None, self.h_axis, self.w_axis, None)
+
+    def fit(self, h: int, w: int, k: int, s: int, mesh) -> "ConvSharding":
+        """Drop spatial axes that this layer's geometry cannot support —
+        the paper's 'spatial dimension ~ kernel size' edge case (§III-A):
+        the layer falls back to sample parallelism and the distribution
+        change between layers becomes a §III-C shuffle (resharding)."""
+        if mesh is None or not self.is_spatial:
+            return self
+        shape = dict(mesh.shape)
+
+        def ok(size, axis):
+            if axis is None:
+                return None
+            m = shape[axis]
+            good = size % m == 0 and (size // m) % s == 0 \
+                and size // m >= max(k, s)
+            return axis if good else None
+
+        return dataclasses.replace(self, h_axis=ok(h, self.h_axis),
+                                    w_axis=ok(w, self.w_axis))
+
+
+def _split_dim_conv(x, w, *, dim, s, k, lo, hi, axis_name, axis_size,
+                    other_pads, stride_other, overlap):
+    """Conv along one sharded spatial `dim` (1=H or 2=W) of local block x.
+
+    `other_pads`/`stride_other` apply to the other (unsharded) spatial dim.
+    Returns the local output block for this shard.
+    """
+    hl = x.shape[dim]
+    assert hl % s == 0, f"local extent {hl} not divisible by stride {s}"
+    assert hl >= k, (
+        "spatial shard smaller than the kernel — the paper notes this edge "
+        "case; use sample/channel parallelism for this layer instead")
+    ho = hl // s
+
+    def conv(z, pad_dim):
+        pads = [(0, 0), (0, 0)]
+        pads[dim - 1] = pad_dim
+        pads[2 - dim] = other_pads
+        strides = [0, 0]
+        strides[dim - 1] = s
+        strides[2 - dim] = stride_other
+        return lax.conv_general_dilated(
+            z, w, window_strides=tuple(strides), padding=tuple(pads),
+            dimension_numbers=DIMNUMS)
+
+    if lo == 0 and hi == 0:
+        return conv(x, (0, 0))
+
+    halo_lo, halo_hi = halo_lib.halo_slices(
+        x, dim, lo, hi, axis_name, axis_size)
+
+    if not overlap:
+        parts = [p for p in (halo_lo, x, halo_hi) if p is not None]
+        return conv(lax.concatenate(parts, dimension=dim), (0, 0))
+
+    # --- interior/boundary split (paper §IV-A) ---
+    t_lo = cdiv(lo, s)                       # output rows needing the lo halo
+    i_hi = cdiv(hl + lo - k + 1, s)          # first output row needing hi halo
+    t_hi = ho - i_hi
+    if t_lo + t_hi >= ho:                    # shard too small to split
+        parts = [p for p in (halo_lo, x, halo_hi) if p is not None]
+        return conv(lax.concatenate(parts, dimension=dim), (0, 0))
+
+    blocks = []
+    if t_lo > 0:
+        # top boundary: rows [0, t_lo) read input [-lo, (t_lo-1)s - lo + k)
+        top_in = lax.concatenate(
+            [halo_lo, lax.slice_in_dim(x, 0, (t_lo - 1) * s - lo + k, axis=dim)],
+            dimension=dim)
+        blocks.append(conv(top_in, (0, 0)))
+    # interior: rows [t_lo, i_hi) read input [t_lo*s - lo, (i_hi-1)s - lo + k)
+    inner_in = lax.slice_in_dim(
+        x, t_lo * s - lo, (i_hi - 1) * s - lo + k, axis=dim)
+    blocks.append(conv(inner_in, (0, 0)))
+    if t_hi > 0:
+        bot_in = lax.slice_in_dim(x, i_hi * s - lo, hl, axis=dim)
+        bot_in = lax.concatenate([bot_in, halo_hi], dimension=dim)
+        blocks.append(conv(bot_in, (0, 0)))
+    return lax.concatenate(blocks, dimension=dim) if len(blocks) > 1 else blocks[0]
+
+
+def _local_conv(x, w, *, strides, sharding: ConvSharding, mesh_shape,
+                overlap: bool):
+    """Shard-local forward conv (runs inside shard_map)."""
+    k_h, k_w = w.shape[0], w.shape[1]
+    s_h, s_w = strides
+    ph = same_pads(k_h, s_h)
+    pw = same_pads(k_w, s_w)
+
+    if sharding.h_axis is not None and sharding.w_axis is not None:
+        # shard H first (halo on H incl. full local W), then W.
+        x = halo_lib.halo_exchange(x, 1, ph[0], ph[1], sharding.h_axis,
+                                   mesh_shape[sharding.h_axis])
+        return _split_dim_conv(
+            x, w, dim=2, s=s_w, k=k_w, lo=pw[0], hi=pw[1],
+            axis_name=sharding.w_axis, axis_size=mesh_shape[sharding.w_axis],
+            other_pads=(0, 0), stride_other=s_h, overlap=overlap)
+    if sharding.h_axis is not None:
+        return _split_dim_conv(
+            x, w, dim=1, s=s_h, k=k_h, lo=ph[0], hi=ph[1],
+            axis_name=sharding.h_axis, axis_size=mesh_shape[sharding.h_axis],
+            other_pads=pw, stride_other=s_w, overlap=overlap)
+    if sharding.w_axis is not None:
+        return _split_dim_conv(
+            x, w, dim=2, s=s_w, k=k_w, lo=pw[0], hi=pw[1],
+            axis_name=sharding.w_axis, axis_size=mesh_shape[sharding.w_axis],
+            other_pads=ph, stride_other=s_h, overlap=overlap)
+    raise AssertionError("not spatial")
+
+
+def spatial_conv2d(x, w, *, strides=(1, 1), sharding: ConvSharding,
+                   mesh=None, overlap: bool = True):
+    """'SAME'-padded strided conv2d under hybrid sample/spatial parallelism.
+
+    x: (N, H, W, C) global array (sharded per `sharding` under jit).
+    w: (K_h, K_w, C, F) weights, replicated across the spatial/batch axes
+       (FSDP resharding at the shard_map boundary gathers them if needed).
+    """
+    if x.dtype != w.dtype:      # mixed-precision policy: compute in w's dtype
+        x = x.astype(w.dtype)
+    if not sharding.is_spatial:
+        # pure sample parallelism: local conv, XLA batches it (paper Fig 1a).
+        k_h, k_w = w.shape[0], w.shape[1]
+        y = lax.conv_general_dilated(
+            x, w, window_strides=strides,
+            padding=(same_pads(k_h, strides[0]), same_pads(k_w, strides[1])),
+            dimension_numbers=DIMNUMS)
+        return lax.with_sharding_constraint(y, sharding.x_spec()) \
+            if mesh is not None else y
+
+    mesh = mesh or jax.sharding.get_abstract_mesh()
+    mesh_shape = dict(mesh.shape)
+    fn = functools.partial(_local_conv, strides=strides, sharding=sharding,
+                           mesh_shape=mesh_shape, overlap=overlap)
+    spec = sharding.x_spec()
+    return jax.shard_map(fn, mesh=mesh, in_specs=(spec, P()),
+                         out_specs=spec)(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Pooling under spatial decomposition (paper §III-B: "parallelized similarly")
+# ---------------------------------------------------------------------------
+
+def _local_pool(x, *, window, strides, sharding: ConvSharding, mesh_shape,
+                kind: str):
+    k_h, k_w = window
+    s_h, s_w = strides
+    ph = same_pads(k_h, s_h)
+    pw = same_pads(k_w, s_w)
+    edge = float("-inf") if kind == "max" else 0.0
+
+    pads = [(0, 0), ph, pw, (0, 0)]
+    if sharding.h_axis is not None:
+        x = halo_lib.halo_exchange(x, 1, ph[0], ph[1], sharding.h_axis,
+                                   mesh_shape[sharding.h_axis],
+                                   edge_value=edge)
+        pads[1] = (0, 0)
+    if sharding.w_axis is not None:
+        x = halo_lib.halo_exchange(x, 2, pw[0], pw[1], sharding.w_axis,
+                                   mesh_shape[sharding.w_axis],
+                                   edge_value=edge)
+        pads[2] = (0, 0)
+    return _pool_windows(x, window, strides, tuple(pads), kind)
+
+
+def _pool_windows(x, window, strides, pads, kind):
+    """Pooling via stacked shifted slices + reduce over the window axis —
+    fully reverse-differentiable (reduce_window's max transpose is not
+    supported under shard_map's manual axes)."""
+    k_h, k_w = window
+    s_h, s_w = strides
+    edge = jnp.asarray(float("-inf") if kind == "max" else 0.0, x.dtype)
+    x = jnp.pad(x, pads, constant_values=edge)
+    h_out = (x.shape[1] - k_h) // s_h + 1
+    w_out = (x.shape[2] - k_w) // s_w + 1
+    taps = []
+    for i in range(k_h):
+        for j in range(k_w):
+            taps.append(x[:, i:i + h_out * s_h:s_h,
+                          j:j + w_out * s_w:s_w, :])
+    stack = jnp.stack(taps, axis=-1)
+    if kind == "max":
+        return jnp.max(stack, axis=-1)
+    return jnp.sum(stack, axis=-1) / (k_h * k_w)
+
+
+def spatial_pool(x, *, window=(3, 3), strides=(2, 2),
+                 sharding: ConvSharding, mesh=None, kind: str = "max"):
+    """'SAME' max/avg pool under the same decomposition as spatial_conv2d.
+
+    Max pooling fills the *global-edge* halo with -inf (not the zeros that
+    ppermute produces) so edge windows match single-device 'SAME' semantics.
+    Avg pooling uses count_include_pad=True (zero pad), matching the oracle in
+    models/cnn/layers.py.
+    """
+    if not sharding.is_spatial:
+        k_h, k_w = window
+        s_h, s_w = strides
+        return _pool_windows(
+            x, window, strides,
+            ((0, 0), same_pads(k_h, s_h), same_pads(k_w, s_w), (0, 0)),
+            kind)
+
+    mesh = mesh or jax.sharding.get_abstract_mesh()
+    fn = functools.partial(_local_pool, window=window, strides=strides,
+                           sharding=sharding, mesh_shape=dict(mesh.shape),
+                           kind=kind)
+    spec = sharding.x_spec()
+    return jax.shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec)(x)

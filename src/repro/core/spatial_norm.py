@@ -1,0 +1,80 @@
+"""Batch normalization under spatial decomposition (paper §III-B).
+
+The paper: "Both purely local batch normalization and a variant that
+aggregates over the spatial distribution of a sample are easy to implement."
+We provide three statistics scopes:
+
+  'local'   per-shard statistics (the paper's default; zero communication)
+  'spatial' aggregate over the spatial shards of a sample (psum over the
+            model axis) — the paper's proposed variant
+  'global'  aggregate over all batch+spatial shards (true global BN)
+
+All scopes share parameters (gamma/beta replicated).  Training-mode only
+(running statistics are maintained by the train loop state).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.spatial_conv import ConvSharding
+
+
+def _stats(x, axes):
+    n = 1
+    for a in axes:
+        n *= x.shape[a]
+    s = jnp.sum(x, axes)
+    ss = jnp.sum(jnp.square(x), axes)
+    return s, ss, n
+
+
+def batch_norm(x, gamma, beta, *, sharding: ConvSharding, mesh=None,
+               scope: str = "local", eps: float = 1e-5):
+    """BN over (N, H, W) of an NHWC tensor with the given statistics scope."""
+    reduce_axes = (0, 1, 2)
+
+    if scope == "local" or not sharding.is_spatial:
+        def local_fn(x):
+            s, ss, n = _stats(x.astype(jnp.float32), reduce_axes)
+            mean = s / n
+            var = ss / n - jnp.square(mean)
+            inv = lax.rsqrt(var + eps)
+            return ((x - mean.astype(x.dtype)) * inv.astype(x.dtype))
+        if scope == "local" and sharding.is_spatial and mesh is not None:
+            spec = sharding.x_spec()
+            y = jax.shard_map(local_fn, mesh=mesh, in_specs=(spec,),
+                              out_specs=spec)(x)
+        else:
+            y = local_fn(x)
+        return y * gamma + beta
+
+    comm_axes: tuple[str, ...]
+    if scope == "spatial":
+        comm_axes = tuple(a for a in (sharding.h_axis, sharding.w_axis) if a)
+    elif scope == "global":
+        comm_axes = tuple(a for a in (sharding.batch_axes or ())
+                          + (sharding.h_axis, sharding.w_axis) if a)
+    else:
+        raise ValueError(f"unknown BN scope {scope!r}")
+
+    mesh = mesh or jax.sharding.get_abstract_mesh()
+
+    def fn(x):
+        s, ss, n = _stats(x.astype(jnp.float32), reduce_axes)
+        s = lax.psum(s, comm_axes)
+        ss = lax.psum(ss, comm_axes)
+        n = n * functools.reduce(
+            lambda a, b: a * b, (dict(mesh.shape)[ax] for ax in comm_axes), 1)
+        mean = s / n
+        var = ss / n - jnp.square(mean)
+        inv = lax.rsqrt(var + eps)
+        return (x - mean.astype(x.dtype)) * inv.astype(x.dtype)
+
+    spec = sharding.x_spec()
+    y = jax.shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec)(x)
+    return y * gamma + beta

@@ -1,0 +1,170 @@
+"""Parallel execution strategies (paper §V-C).
+
+Given a network (DAG of layers), a machine and a mesh, pick a distribution
+for every layer:
+
+  1. generate per-layer candidate distributions — load-balanced assignments
+     of mesh axes to tensor dimensions, preferring cheaper methods (sample
+     over spatial over channel/filter) exactly as the paper's heuristic;
+  2. line networks: single-source shortest path over the layered DAG whose
+     edge (D_i at ℓ_i) -> (D_j at ℓ_{i+1}) costs Cost_{D_i}(ℓ_i) +
+     Shuffle(D_i, D_j); solved by DP in topological order (linear time);
+  3. branchy networks (ResNets): longest-path-first — fix the most
+     compute-intensive source-to-sink path with (2), then repeat on the next
+     longest path containing the fewest already-fixed layers, inheriting
+     fixed layers as forced single candidates, until all layers are covered.
+
+Channel/filter parallelism — sketched-only in the paper (§III-D) — is a
+selectable candidate here (beyond-paper), so the optimizer can discover it
+for many-filter/small-spatial layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Mapping, Sequence
+
+import networkx as nx
+
+from repro.core.distribution import Dist
+from repro.core.perfmodel import (ConvLayer, EmpiricalTable, Machine,
+                                  layer_cost, shuffle_time)
+
+
+# ---------------------------------------------------------------------------
+# candidate generation
+# ---------------------------------------------------------------------------
+
+def candidate_dists(layer: ConvLayer, mesh_shape: Mapping[str, int],
+                    allow_channel_filter: bool = False,
+                    allow_w_split: bool = True) -> list[Dist]:
+    """Load-balanced assignments of every mesh axis to one tensor dim.
+
+    Each mesh axis independently partitions one of N / H / W / (C&F); an
+    assignment is valid iff every dim divides evenly and spatial shards stay
+    at least kernel-sized (the paper's edge case).  Ordered cheapest-first
+    (sample < spatial < channel/filter) so ties break toward the paper's
+    preference.
+    """
+    axes = list(mesh_shape)
+    targets = ["N", "H"]
+    if allow_w_split:
+        targets.append("W")
+    if allow_channel_filter and layer.kind == "conv":
+        targets.append("CF")
+
+    def rank(assign):  # cheaper methods first
+        order = {"N": 0, "H": 1, "W": 1, "CF": 2}
+        return tuple(sorted(order[t] for t in assign))
+
+    seen, out = set(), []
+    for assign in sorted(itertools.product(targets, repeat=len(axes)),
+                         key=rank):
+        dims: dict[str, tuple[str, ...]] = {}
+        for ax, tgt in zip(axes, assign):
+            for d in (("C", "F") if tgt == "CF" else (tgt,)):
+                dims[d] = dims.get(d, ()) + (ax,)
+        d = Dist("+".join(sorted(set(assign))).lower(), dims)
+        ways = {k: d.ways(k, mesh_shape) for k in ("N", "H", "W", "C", "F")}
+        if layer.n % ways["N"] or layer.h % ways["H"] or \
+           layer.w % ways["W"] or layer.c % ways["C"] or layer.f % ways["F"]:
+            continue
+        if ways["H"] > 1 and layer.h // ways["H"] < layer.k:
+            continue
+        if ways["W"] > 1 and layer.w // ways["W"] < layer.k:
+            continue
+        if layer.kind == "pool" and (ways["C"] > 1 or ways["F"] > 1):
+            continue
+        key = tuple(sorted((k, v) for k, v in dims.items()))
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(d)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# line-network shortest path (paper §V-C)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StrategyResult:
+    dists: list[Dist]
+    cost: float
+
+
+def solve_line(m: Machine, layers: Sequence[ConvLayer],
+               candidates: Sequence[Sequence[Dist]],
+               mesh_shape: Mapping[str, int],
+               table: EmpiricalTable | None = None,
+               overlap: bool = True) -> StrategyResult:
+    """DP shortest path over the candidate-distribution DAG."""
+    n = len(layers)
+    assert n and all(candidates), "every layer needs >= 1 candidate"
+    lcost = [[layer_cost(m, layers[i], d, mesh_shape, table, overlap).total
+              for d in candidates[i]] for i in range(n)]
+
+    best = list(lcost[0])                      # source -> first-layer nodes
+    back: list[list[int]] = [[-1] * len(candidates[0])]
+    for i in range(1, n):
+        cur = []
+        bk = []
+        for j, dj in enumerate(candidates[i]):
+            best_prev, arg = float("inf"), -1
+            for p, dp in enumerate(candidates[i - 1]):
+                w = best[p] + shuffle_time(m, layers[i - 1], dp, dj,
+                                           mesh_shape)
+                if w < best_prev:
+                    best_prev, arg = w, p
+            cur.append(best_prev + lcost[i][j])
+            bk.append(arg)
+        best, back = cur, back + [bk]
+
+    j = min(range(len(best)), key=best.__getitem__)
+    total = best[j]
+    picks = [j]
+    for i in range(n - 1, 0, -1):
+        j = back[i][j]
+        picks.append(j)
+    picks.reverse()
+    return StrategyResult([candidates[i][picks[i]] for i in range(n)], total)
+
+
+# ---------------------------------------------------------------------------
+# branchy networks: longest-path-first (paper §V-C)
+# ---------------------------------------------------------------------------
+
+def solve_dag(m: Machine, graph: nx.DiGraph,
+              mesh_shape: Mapping[str, int],
+              table: EmpiricalTable | None = None,
+              overlap: bool = True,
+              allow_channel_filter: bool = False) -> dict[str, Dist]:
+    """graph: DiGraph whose nodes carry a 'layer': ConvLayer attribute.
+
+    Returns {layer name: Dist}.
+    """
+    assert nx.is_directed_acyclic_graph(graph)
+    fixed: dict[str, Dist] = {}
+    g = graph.copy()
+    for u, v in g.edges:
+        g[u][v]["w"] = g.nodes[u]["layer"].flops_fwd()
+
+    while len(fixed) < graph.number_of_nodes():
+        # longest (most compute-intensive) path among unfixed-containing ones
+        path = nx.dag_longest_path(g, weight="w")
+        if all(p in fixed for p in path):
+            # fall back: any unfixed node, treated as a singleton path
+            path = [next(n for n in g.nodes if n not in fixed)]
+        layers = [graph.nodes[p]["layer"] for p in path]
+        cands = [[fixed[p]] if p in fixed else
+                 candidate_dists(layers[i], mesh_shape,
+                                 allow_channel_filter=allow_channel_filter)
+                 for i, p in enumerate(path)]
+        res = solve_line(m, layers, cands, mesh_shape, table, overlap)
+        for p, d in zip(path, res.dists):
+            fixed.setdefault(p, d)
+        # de-prioritize the fixed path so the next longest path is found
+        for u, v in zip(path, path[1:]):
+            if g.has_edge(u, v):
+                g[u][v]["w"] = 0.0
+    return fixed

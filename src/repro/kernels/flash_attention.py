@@ -1,0 +1,121 @@
+"""Pallas TPU flash attention (blocked online softmax).
+
+The local-shard attention inside ring attention / prefill is the
+transformer hot spot.  Classic streaming formulation:
+
+  grid = (B, Hq, Sq/block_q, Sk/block_k)   -- last dim innermost
+  VMEM scratch (m, l, acc) persists across the Sk sweep; the output tile is
+  written once on the final k-block.
+
+Supports GQA (kv-head = q-head // group via the k/v index_map), causal and
+sliding-window masks, and gemma2-style logit softcapping.  Inputs are taken
+(B, H, S, D) — the wrapper transposes from the model's (B, S, H, D).
+
+Block sizes default to MXU/VPU-aligned (block_q=block_k=128, D untiled).
+fp32 accumulation regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+            scale, causal, window, softcap, block_q, block_k, n_k):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, 0]                                   # (bq, d)
+    k = k_ref[0, 0]                                   # (bk, d)
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev = m_sc[...], l_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_prev * corr + jnp.sum(p, axis=1)
+    m_sc[...] = m_new
+    acc_sc[...] = acc_sc[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[...] = (acc_sc[...] / l[:, None])[None, None] \
+            .astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, block_q=128, block_k=128,
+                    interpret: bool = False):
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D) -> (B, Sq, Hq, D)."""
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    block_q = min(block_q, sq)
+    while sq % block_q:
+        block_q -= 1
+    block_k = min(block_k, sk)
+    while sk % block_k:
+        block_k -= 1
+    n_k = sk // block_k
+
+    qt = q.transpose(0, 2, 1, 3)                      # (B, Hq, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             window=window, softcap=softcap,
+                             block_q=block_q, block_k=block_k, n_k=n_k)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, hq, sq // block_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,71 @@
+"""jit'd dispatchers for the Pallas kernels.
+
+Backend policy:
+  * TPU: run the Pallas kernel compiled (the production path).
+  * CPU + REPRO_KERNELS=interpret: run the kernel body in interpret mode
+    (exactly what the correctness sweeps in tests/ do).
+  * CPU default: the pure-jnp reference — fast enough for CI and the
+    numerically identical semantic definition.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import conv2d as _conv
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd as _ssd
+from repro.kernels import ref as _ref
+
+
+def _mode():
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    return os.environ.get("REPRO_KERNELS", "ref")
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def conv2d(x, w, stride: int = 1):
+    m = _mode()
+    if m == "pallas":
+        return _conv.conv2d(x, w, stride=stride)
+    if m == "interpret":
+        return _conv.conv2d(x, w, stride=stride, interpret=True)
+    return _ref.conv2d_ref(x, w, stride=stride)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "scale"))
+def flash_attention(q, k, v, causal=True, window=None, softcap=None,
+                    scale=None):
+    m = _mode()
+    if m == "pallas":
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale)
+    if m == "interpret":
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale,
+                                   interpret=True)
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                    softcap=softcap, scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunk(xdt, la, B, C, chunk: int):
+    m = _mode()
+    if m == "pallas":
+        return _ssd.ssd_chunk(xdt, la, B, C, chunk=chunk)
+    if m == "interpret":
+        return _ssd.ssd_chunk(xdt, la, B, C, chunk=chunk, interpret=True)
+    b, l, h, p = xdt.shape
+    nc = l // chunk
+    ys, ss = [], []
+    for i in range(nc):
+        sl = slice(i * chunk, (i + 1) * chunk)
+        y, s = _ref.ssd_chunk_ref(xdt[:, sl], la[:, sl], B[:, sl], C[:, sl])
+        ys.append(y)
+        ss.append(s)
+    return jnp.concatenate(ys, axis=1), jnp.stack(ss, axis=1)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are the *semantic* definitions; the kernels must match them exactly
+(up to accumulation order) for every shape/dtype in the test sweeps.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(x, w, stride: int = 1):
+    """VALID conv, NHWC x HWIO -> NHWC (halo/padding handled by caller)."""
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                        scale=None):
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D) with Hq % Hkv == 0."""
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def ssd_chunk_ref(xdt, la, B, C):
+    """Single-chunk SSD: y_i = sum_{j<=i} C_i.B_j exp(cum_i-cum_j) xdt_j,
+    plus the chunk's outgoing state.  xdt: (b, l, h, p); la: (b, l, h);
+    B/C: (b, l, n).  Returns y (b, l, h, p), S (b, h, p, n)."""
+    cum = jnp.cumsum(la, axis=1)                        # (b, l, h)
+    seg = cum[:, :, None, :] - cum[:, None, :, :]       # (b, i, j, h)
+    l = xdt.shape[1]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    seg = jnp.where(mask[None, :, :, None], seg, -1e30)
+    decay = jnp.exp(seg)
+    G = jnp.einsum("bin,bjn->bij", C, B)
+    y = jnp.einsum("bij,bijh,bjhp->bihp", G, decay, xdt.astype(jnp.float32))
+    dec_end = jnp.exp(cum[:, -1:, :] - cum)
+    S = jnp.einsum("bjhp,bjn,bjh->bhpn", xdt.astype(jnp.float32), B,
+                   dec_end)
+    return y.astype(xdt.dtype), S

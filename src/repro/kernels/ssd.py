@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for the SSD (mamba2) intra-chunk pass.
+
+State-space duality makes the within-chunk computation matmul-shaped — the
+part worth putting on the MXU:
+
+  y[i]  = sum_{j<=i} (C_i . B_j) * exp(cum_i - cum_j) * xdt_j     (intra)
+  S     = sum_j xdt_j (x) B_j * exp(cum_end - cum_j)              (summary)
+
+Grid: (B, n_chunks, heads-blocks).  One chunk x one head-block per program:
+  xdt: (1, cl, bh, p)   la: (1, cl, bh)   B/C: (1, cl, n)
+  y:   (1, cl, bh, p)   S: (1, bh, p, n)
+
+The inter-chunk recurrence (tiny, sequential) stays in JAX — see
+models/lm/modules._ssd_chunked, which this kernel slots into.
+fp32 throughout the decay/score math.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xdt_ref, la_ref, b_ref, c_ref, y_ref, s_ref, *, chunk):
+    xdt = xdt_ref[0].astype(jnp.float32)              # (cl, bh, p)
+    la = la_ref[0].astype(jnp.float32)                # (cl, bh)
+    B = b_ref[0].astype(jnp.float32)                  # (cl, n)
+    C = c_ref[0].astype(jnp.float32)                  # (cl, n)
+
+    cum = jnp.cumsum(la, axis=0)                      # (cl, bh)
+    seg = cum[:, None, :] - cum[None, :, :]           # (i, j, bh)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = jnp.where((ii >= jj)[..., None], seg, -1e30)
+    decay = jnp.exp(seg)                              # (i, j, bh)
+
+    G = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (i, j)
+    M = G[:, :, None] * decay                         # (i, j, bh)
+    # y[i,h,p] = sum_j M[i,j,h] xdt[j,h,p]
+    y = jnp.einsum("ijh,jhp->ihp", M, xdt,
+                   preferred_element_type=jnp.float32)
+    y_ref[...] = y[None].astype(y_ref.dtype)
+
+    dec_end = jnp.exp(cum[-1:, :] - cum)              # (cl, bh)
+    # S[h,p,n] = sum_j xdt[j,h,p] B[j,n] dec_end[j,h]
+    xw = xdt * dec_end[:, :, None]                    # (cl, bh, p)
+    s = jnp.einsum("jhp,jn->hpn", xw, B,
+                   preferred_element_type=jnp.float32)
+    s_ref[...] = s[None]
+
+
+def ssd_chunk(xdt, la, B, C, *, chunk: int, block_h: int = 0,
+              interpret: bool = False):
+    """xdt: (b, l, h, p); la: (b, l, h); B/C: (b, l, n) with l % chunk == 0.
+
+    Returns y_intra: (b, l, h, p) and per-chunk summaries S: (b, nc, h, p, n)
+    (zero-inflow states; combine across chunks/shards in JAX).
+    """
+    b, l, h, p = xdt.shape
+    n = B.shape[-1]
+    assert l % chunk == 0
+    nc = l // chunk
+    block_h = block_h or h
+    while h % block_h:
+        block_h -= 1
+
+    xz = xdt.reshape(b * nc, chunk, h, p)
+    lz = la.reshape(b * nc, chunk, h)
+    Bz = B.reshape(b * nc, chunk, n)
+    Cz = C.reshape(b * nc, chunk, n)
+
+    kern = functools.partial(_kernel, chunk=chunk)
+    y, s = pl.pallas_call(
+        kern,
+        grid=(b * nc, h // block_h),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_h, p),
+                         lambda ci, hi: (ci, 0, hi, 0)),
+            pl.BlockSpec((1, chunk, block_h), lambda ci, hi: (ci, 0, hi)),
+            pl.BlockSpec((1, chunk, n), lambda ci, hi: (ci, 0, 0)),
+            pl.BlockSpec((1, chunk, n), lambda ci, hi: (ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_h, p),
+                         lambda ci, hi: (ci, 0, hi, 0)),
+            pl.BlockSpec((1, block_h, p, n), lambda ci, hi: (ci, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * nc, chunk, h, p), xdt.dtype),
+            jax.ShapeDtypeStruct((b * nc, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xz, lz, Bz, Cz)
+    return (y.reshape(b, l, h, p), s.reshape(b, nc, h, p, n))

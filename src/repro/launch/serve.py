@@ -1,0 +1,100 @@
+"""Batched serving driver: prefill the prompt batch, then greedy-decode with
+the sequence-sharded KV cache (the paper's decomposition applied to
+inference).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+      --batch 4 --prompt-len 32 --gen 16 [--data 2 --model 2]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.launch import shardings as SH
+from repro.launch.mesh import make_mesh, batch_axes
+from repro.models.lm import transformer as T
+from repro.models.lm.modules import ShardCtx
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    arch = registry.canon(args.arch)
+    cfg = registry.get(arch, smoke=args.smoke)
+    mesh = make_mesh(data=args.data, model=args.model)
+    ba = batch_axes(mesh)
+    sharded = args.model > 1
+    ctx = ShardCtx(mesh=mesh, seq_axis="model" if sharded else None,
+                   batch_axes=ba if args.data > 1 else ())
+
+    params = T.init(jax.random.PRNGKey(args.seed), cfg)
+    max_len = args.prompt_len + args.gen
+    # pad cache length to a multiple of the sequence shards
+    m = dict(mesh.shape).get("model", 1)
+    max_len = ((max_len + m - 1) // m) * m
+
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(1, cfg.vocab, (args.batch, args.prompt_len),
+                           dtype=np.int32)
+    tokens = jnp.asarray(prompts)
+    frames = None
+    if cfg.frontend == "audio_stub":
+        frames = jax.random.normal(
+            jax.random.PRNGKey(1), (args.batch, args.prompt_len,
+                                    cfg.d_model))
+
+    t0 = time.time()
+    with mesh:
+        memory = None
+        if cfg.is_encdec:
+            memory = T.encode(params, cfg, frames, ctx, remat=False)
+        caches = T.init_decode_state(params, cfg, args.batch, max_len,
+                                     dtype=jnp.float32)
+        if sharded:
+            cspecs = SH.kv_cache_specs(caches, mesh, args.data > 1, "model")
+            caches = jax.tree.map(
+                lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+                caches, cspecs)
+        decode = jax.jit(
+            lambda p, t, c, L, mem: T.decode_step(p, cfg, t, c, L, ctx,
+                                                  memory=mem),
+            donate_argnums=(2,))
+        # teacher-forced prefill via the decode path (prompt replay), then
+        # greedy generation.  (Bulk ring-attention prefill: T.prefill.)
+        out = []
+        tok = tokens[:, :1]
+        for i in range(args.prompt_len + args.gen - 1):
+            logits, caches = decode(params, tok, caches, jnp.int32(i),
+                                    memory)
+            if i + 1 < args.prompt_len:
+                tok = tokens[:, i + 1:i + 2]
+            else:
+                tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+                out.append(np.asarray(tok)[:, 0])
+    dt = time.time() - t0
+    gen = np.stack(out, 1)
+    steps = args.prompt_len + args.gen - 1
+    print(f"arch={cfg.name} mesh={dict(mesh.shape)} "
+          f"{steps} decode steps in {dt:.1f}s "
+          f"({dt/steps*1e3:.1f} ms/step incl. compile)")
+    print("generated token ids:\n", gen)
+    assert np.isfinite(gen).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Sharding rules: how every tensor of every arch maps onto the mesh.
+
+Baseline (paper-faithful hybrid sample x spatial + FSDP memory sharding):
+  * batch dims  -> ("pod", "data")
+  * sequence/H  -> "model"            (the paper's fine-grained axis)
+  * weights     -> largest dim FSDP-sharded over "data", replicated on
+                   "model" (the paper replicates weights; FSDP is the
+                   memory adaptation for 9-46B params, DESIGN.md §2)
+  * optimizer   -> inherits parameter shardings (ZeRO-1)
+
+The hillclimbed variants (EXPERIMENTS.md §Perf) override pieces of this —
+e.g. TP on heads/ffn over "model", expert sharding for MoE.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+from repro.train.train_loop import fsdp_spec_for
+
+
+def fsdp_tree_specs(tree, mesh, axes=("data",)):
+    """FSDP/ZeRO PartitionSpec for every leaf: the largest dim divisible by
+    the data-axis size is sharded over 'data'; small tensors replicate.
+
+    Weights stay REPLICATED across the model axis — exactly the paper's
+    design (w replicated on every processor of a spatial group, §III-A) —
+    and shard only across the sample-parallel groups, which also shards
+    optimizer state (ZeRO).  Probing showed that co-sharding weights over
+    the busy model axis makes XLA gather entire stacked layer arrays
+    around the scan (hundreds of GiB of temps); archs whose weights still
+    don't fit this way (mixtral-8x7b) are exactly the ones the hillclimbed
+    expert/vocab-parallel variant (§Perf) fixes."""
+    shape_map = dict(mesh.shape)
+    data = ("data",) if "data" in shape_map else ()
+    n_data = shape_map.get("data", 1)
+
+    def spec(x):
+        if not x.shape or x.size < 2 ** 14 or not data:
+            return P()
+        for d in sorted(range(x.ndim), key=lambda d: -x.shape[d]):
+            if x.shape[d] % n_data == 0 and x.shape[d] >= n_data:
+                s = [None] * x.ndim
+                s[d] = "data"
+                return P(*s)
+        return P()
+    return jax.tree.map(spec, tree)
+
+
+def zero1_tree_specs(tree, mesh, axes=("data", "model")):
+    """Optimizer-state sharding over BOTH axes (ZeRO-1 over all chips).
+
+    Unlike weights, mu/nu are touched only in the (scan-free) update at the
+    step's end, so the 2-axis sharding that pathologically regathers
+    weights around the layer scan is safe here — and halves-squared the
+    largest fp32 residency (4.6 GiB -> 0.3 GiB/device for gemma2-9b)."""
+    shape_map = dict(mesh.shape)
+    ax = tuple(a for a in axes if a in shape_map)
+    n = int(np.prod([shape_map[a] for a in ax])) if ax else 1
+    n_data = shape_map.get("data", 1)
+
+    def spec(x):
+        if not x.shape or x.size < 2 ** 14:
+            return P()
+        for d in sorted(range(x.ndim), key=lambda d: -x.shape[d]):
+            if x.shape[d] % n == 0 and x.shape[d] >= n:
+                s = [None] * x.ndim
+                s[d] = ax
+                return P(*s)
+        for d in sorted(range(x.ndim), key=lambda d: -x.shape[d]):
+            if x.shape[d] % n_data == 0 and x.shape[d] >= n_data:
+                s = [None] * x.ndim
+                s[d] = "data"
+                return P(*s)
+        return P()
+    return jax.tree.map(spec, tree)
+
+
+def with_sharding(tree, mesh, specs):
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(
+            x.shape, x.dtype, sharding=NamedSharding(mesh, s)),
+        tree, specs)
+
+
+def lm_batch_spec(mesh, kind: str) -> dict[str, P]:
+    ba = batch_axes(mesh)
+    if kind == "train":
+        return {"tokens": P(ba, "model"), "labels": P(ba, "model")}
+    if kind == "prefill":
+        return {"tokens": P(ba, "model")}
+    if kind == "decode":
+        return {"tokens": P(ba, None)}
+    raise ValueError(kind)
+
+
+def kv_cache_specs(cache_tree, mesh, batch_sharded: bool, seq_axes):
+    """Cache: (layers, B, S, Hkv, hd) -> P(None, batch, seq_axes, ...);
+    SSM states (layers, B, H, p, n) replicated over model (tiny)."""
+    ba = batch_axes(mesh) if batch_sharded else None
+
+    def spec(x):
+        if x.ndim == 5 and x.shape[2] > x.shape[3]:      # k/v cache
+            return P(None, ba, seq_axes, None, None)
+        if x.ndim == 5:                                   # ssm state
+            return P(None, ba, None, None, None)
+        if x.ndim == 4:                                   # conv tail
+            return P(None, ba, None, None)
+        return P()
+    return jax.tree.map(spec, cache_tree)

@@ -1,0 +1,91 @@
+"""Run the full dry-run matrix: 10 archs x 4 shapes x {1-pod, 2-pod} plus
+the paper's CNN workloads.  One subprocess per cell (fresh XLA, fresh
+device-count env); artifacts are JSON files consumed by benchmarks/roofline
+and EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m repro.launch.sweep [--only-missing] [--pods 1,2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import registry
+
+
+def cell_tag(arch, shape, multi_pod, variant="base"):
+    tag = f"{arch}-{shape}-{'pod2' if multi_pod else 'pod1'}"
+    return tag if variant == "base" else f"{tag}-{variant}"
+
+
+def run_one(arch, shape, multi_pod, out_dir, variant="base",
+            timeout=1200) -> dict:
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out_dir]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if variant != "base":
+        cmd += ["--variant", variant]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    t0 = time.time()
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                       env=env, cwd=os.path.dirname(os.path.dirname(
+                           os.path.dirname(os.path.dirname(
+                               os.path.abspath(__file__))))))
+    ok = r.returncode == 0
+    if not ok:
+        err = (r.stderr or "").strip().splitlines()
+        fail = {"arch": arch, "shape": shape, "variant": variant,
+                "mesh": "2x16x16" if multi_pod else "16x16", "ok": False,
+                "error": err[-15:] if err else ["(no stderr)"]}
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir,
+                               cell_tag(arch, shape, multi_pod, variant)
+                               + ".json"), "w") as f:
+            json.dump(fail, f, indent=1)
+    print(f"[{time.strftime('%H:%M:%S')}] {arch:24s} {shape:12s} "
+          f"{'pod2' if multi_pod else 'pod1'} "
+          f"{'OK' if ok else 'FAIL'} ({time.time()-t0:.0f}s)", flush=True)
+    return {"ok": ok}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only-missing", action="store_true")
+    ap.add_argument("--pods", default="1,2")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--include-cnn", action="store_true", default=True)
+    args = ap.parse_args()
+    pods = [p == "2" for p in args.pods.split(",")]
+
+    cells = []
+    for arch in registry.ARCHS:
+        for shape in registry.SHAPES:
+            for mp in pods:
+                cells.append((arch, shape, mp))
+    if args.include_cnn:
+        for arch in registry.CNN_ARCHS:
+            for mp in pods:
+                cells.append((arch, "cnn", mp))
+
+    n_ok = n_fail = n_skip = 0
+    for arch, shape, mp in cells:
+        path = os.path.join(args.out, cell_tag(arch, shape, mp) + ".json")
+        if args.only_missing and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("ok"):
+                    n_skip += 1
+                    continue
+        ok = run_one(arch, shape, mp, args.out)["ok"]
+        n_ok += ok
+        n_fail += not ok
+    print(f"sweep done: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+
+
+if __name__ == "__main__":
+    main()

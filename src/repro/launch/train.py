@@ -1,0 +1,162 @@
+"""Fault-tolerant training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
+      --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ck [--data 2 --model 2]
+
+Runs the resilient loop (checkpoint/restart, straggler monitor) around the
+jit'd train step.  On this CPU container use --smoke (reduced config); the
+full configs are for the TPU pods the dry-run targets.  `--arch mesh1k/
+mesh2k/resnet50 --smoke` trains the paper's CNN workloads under hybrid
+sample x spatial parallelism.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs import registry
+from repro.data import pipeline
+from repro.launch import shardings as SH
+from repro.launch.mesh import make_mesh, batch_axes
+from repro.optim.optimizer import adamw, sgd, warmup_cosine
+from repro.runtime.fault_tolerance import ResilientLoop, StragglerMonitor
+from repro.train.train_loop import TrainStepConfig, make_train_step
+from repro.utils import BF16, FP32, human_count, tree_num_params
+
+logging.basicConfig(level=logging.INFO)
+
+
+def build(args, mesh):
+    arch = registry.canon(args.arch)
+    ba = batch_axes(mesh)
+    if arch in registry.CNN_ARCHS:
+        from repro.core.spatial_conv import ConvSharding
+        cfg = registry.get(arch, smoke=args.smoke)
+        sh = ConvSharding(batch_axes=ba, h_axis="model")
+        if arch == "resnet50":
+            from repro.models.cnn import resnet as M
+            loss = functools.partial(M.loss_fn, cfg=cfg, sharding=sh,
+                                     mesh=mesh)
+            mk = lambda s: pipeline.synthetic_imagenet_batch(
+                s, args.batch, cfg.input_hw, cfg.n_classes)
+        else:
+            from repro.models.cnn import meshnet as M
+            loss = functools.partial(M.loss_fn, cfg=cfg, shardings=sh,
+                                     mesh=mesh)
+            mk = lambda s: pipeline.synthetic_mesh_batch(
+                s, args.batch, cfg.input_hw, cfg.in_channels,
+                out_hw=cfg.out_hw)
+        params = M.init(jax.random.PRNGKey(args.seed), cfg)
+        opt = sgd(warmup_cosine(args.lr, 10, args.steps), momentum=0.9)
+        prec = FP32
+
+        def put(b):
+            out = {}
+            for k, v in b.items():
+                spec = P(ba, "model") if v.ndim == 4 and \
+                    v.shape[1] % dict(mesh.shape).get("model", 1) == 0 \
+                    else P(ba)
+                out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+            return out
+    else:
+        from repro.models.lm import transformer as T
+        from repro.models.lm.modules import ShardCtx
+        cfg = registry.get(arch, smoke=args.smoke)
+        ctx = ShardCtx(mesh=mesh, seq_axis="model", batch_axes=ba)
+        loss = functools.partial(T.loss_fn, cfg=cfg, ctx=ctx,
+                                 remat=args.remat)
+        params = T.init(jax.random.PRNGKey(args.seed), cfg)
+        opt = adamw(warmup_cosine(args.lr, 20, args.steps))
+        prec = BF16 if args.bf16 else FP32
+        mk = lambda s: pipeline.synthetic_lm_batch(
+            s, args.batch, args.seq, cfg.vocab)
+
+        def put(b):
+            return {k: jax.device_put(v, NamedSharding(mesh, P(ba, "model")))
+                    for k, v in b.items()}
+
+    pspecs = SH.fsdp_tree_specs(params, mesh)
+    params = jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        params, pspecs)
+    return cfg, params, opt, loss, mk, put, prec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--pod", type=int, default=1)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--bf16", action="store_true")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--pod-compression", default="none",
+                    choices=["none", "bf16", "int8_ef"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    mesh = make_mesh(data=args.data, model=args.model, pod=args.pod)
+    cfg, params, opt, loss, mk, put, prec = build(args, mesh)
+    print(f"arch={cfg.name} params={human_count(tree_num_params(params))} "
+          f"mesh={dict(mesh.shape)}")
+
+    tstep = make_train_step(
+        lambda p, b: loss(p, b), opt, mesh,
+        TrainStepConfig(grad_accum=args.grad_accum, precision=prec,
+                        pod_compression=args.pod_compression))
+    ck = CheckpointManager(args.ckpt_dir, keep=3, async_save=True)
+    state = (params, opt.init(params), None)
+    start = 0
+    restored, manifest = ck.restore(state) if ck.latest_step() else (None,
+                                                                     None)
+    if restored is not None:
+        state, start = restored, manifest["extra"]["step"]
+        print(f"resumed from step {start}")
+
+    pf = pipeline.Prefetcher(mk, start_step=start)
+    mon = StragglerMonitor()
+    t0 = time.time()
+    losses = []
+
+    def make_step():
+        def run(state, step):
+            p, o, ef = state
+            b = put(next(pf))
+            p, o, ef, m = tstep(p, o, ef, b)
+            losses.append(float(m["loss"]))
+            if step % args.log_every == 0:
+                dt = time.time() - t0
+                print(f"step {step:5d} loss {losses[-1]:.4f} "
+                      f"({dt/(len(losses) or 1):.3f}s/step)")
+            return (p, o, ef), m
+        return run
+
+    loop = ResilientLoop(ckpt=ck, make_step=make_step,
+                         ckpt_every=args.ckpt_every)
+    state, step, metrics = loop.run(state, start, args.steps, monitor=mon)
+    ck.save(step, state, extra={"step": step})
+    ck.wait()
+    pf.close()
+    print(f"done at step {step}; final loss {losses[-1]:.4f}; "
+          f"straggler stats {mon.stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Functional CNN layers, distribution-aware (paper §III-B).
+
+Every layer is (init, apply) with explicit parameter pytrees.  `apply` takes
+the layer's `ConvSharding` (the runtime projection of the paper's D): conv
+and pool route through the halo-exchange implementations in
+repro.core.spatial_conv; BN through repro.core.spatial_norm; element-wise ops
+parallelize trivially under any distribution (paper: "Element-wise
+operations such as ReLUs parallelize trivially").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.spatial_conv import ConvSharding, spatial_conv2d, spatial_pool
+from repro.core.spatial_norm import batch_norm
+
+
+def conv_init(key, k: int, c_in: int, c_out: int, dtype=jnp.float32):
+    fan_in = k * k * c_in
+    w = jax.random.normal(key, (k, k, c_in, c_out), dtype) \
+        * jnp.asarray(jnp.sqrt(2.0 / fan_in), dtype)
+    return {"w": w}
+
+
+def conv_apply(params, x, *, stride=1, sharding: ConvSharding,
+               mesh=None, overlap=True):
+    sharding = sharding.fit(x.shape[1], x.shape[2], params["w"].shape[0],
+                            stride, mesh)
+    return spatial_conv2d(x, params["w"], strides=(stride, stride),
+                          sharding=sharding, mesh=mesh, overlap=overlap)
+
+
+def bn_init(c: int, dtype=jnp.float32):
+    return {"gamma": jnp.ones((c,), dtype), "beta": jnp.zeros((c,), dtype)}
+
+
+def bn_state(c: int):
+    return {"mean": jnp.zeros((c,), jnp.float32),
+            "var": jnp.ones((c,), jnp.float32)}
+
+
+def bn_apply(params, x, *, sharding: ConvSharding, mesh=None,
+             scope: str = "local"):
+    return batch_norm(x, params["gamma"], params["beta"], sharding=sharding,
+                      mesh=mesh, scope=scope)
+
+
+def relu(x):
+    return jnp.maximum(x, 0)
+
+
+def max_pool(x, *, window=3, stride=2, sharding: ConvSharding, mesh=None):
+    sharding = sharding.fit(x.shape[1], x.shape[2], window, stride, mesh)
+    return spatial_pool(x, window=(window, window), strides=(stride, stride),
+                        sharding=sharding, mesh=mesh, kind="max")
+
+
+def global_avg_pool(x, *, sharding: ConvSharding, mesh=None):
+    """Mean over H, W.  Under spatial sharding this is a local mean + psum —
+    cheaper than gathering (communication: one scalar per channel)."""
+    if not sharding.is_spatial:
+        return jnp.mean(x, axis=(1, 2))
+    import functools
+    from jax.sharding import PartitionSpec as P
+    mesh = mesh or jax.sharding.get_abstract_mesh()
+    axes = tuple(a for a in (sharding.h_axis, sharding.w_axis) if a)
+    shape = dict(mesh.shape)
+    denom = 1
+    for a in axes:
+        denom *= shape[a]
+
+    def fn(x):
+        return lax.psum(jnp.mean(x, axis=(1, 2)), axes) / denom
+
+    spec = sharding.x_spec()
+    out_spec = P(spec[0], None)
+    return jax.shard_map(fn, mesh=mesh, in_specs=(spec,),
+                         out_specs=out_spec)(x)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (d_in, d_out), dtype) \
+        * jnp.asarray(jnp.sqrt(1.0 / d_in), dtype)
+    return {"w": w, "b": jnp.zeros((d_out,), dtype)}
+
+
+def dense_apply(params, x):
+    return x @ params["w"] + params["b"]

@@ -1,0 +1,113 @@
+"""The paper's mesh-tangling models (§VI): fully-convolutional VGG-style
+semantic segmentation on 1024x1024 (1K) / 2048x2048 (2K) 18-channel inputs.
+
+"six blocks of either three (1K) or five (2K) convolution-batchnorm-ReLU
+operations, using 3x3 convolutional filters, and a final convolutional layer
+for prediction.  Downsampling is performed via stride-2 convolution at the
+first convolutional filter of each block."  Channel widths follow the VGGNet
+progression the model was adapted from.  The 2K model's activations exceed a
+single 16 GB GPU even at batch size 1 — the paper's headline memory argument
+for spatial parallelism.
+
+Per the paper's experiments, one ConvSharding is applied to every layer of a
+given configuration ("the same data decomposition for every layer"), but
+`apply` accepts a per-layer list for strategy-optimizer-driven runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.perfmodel import ConvLayer
+from repro.core.spatial_conv import ConvSharding
+from repro.models.cnn import layers as L
+
+VGG_WIDTHS = (64, 128, 256, 512, 512, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshNetConfig:
+    name: str
+    input_hw: int = 1024
+    in_channels: int = 18
+    convs_per_block: int = 3          # 3 for 1K, 5 for 2K
+    widths: tuple = VGG_WIDTHS
+    n_classes: int = 1                # per-pixel tangling logit
+    bn_scope: str = "local"           # paper §III-B default
+
+    @property
+    def out_hw(self) -> int:
+        return self.input_hw // (2 ** len(self.widths))
+
+
+MESH1K = MeshNetConfig("mesh1k", input_hw=1024, convs_per_block=3)
+MESH2K = MeshNetConfig("mesh2k", input_hw=2048, convs_per_block=5)
+
+
+def init(key, cfg: MeshNetConfig, dtype=jnp.float32):
+    params = []
+    c_in = cfg.in_channels
+    for b, width in enumerate(cfg.widths):
+        for i in range(cfg.convs_per_block):
+            key, k1 = jax.random.split(key)
+            params.append({"conv": L.conv_init(k1, 3, c_in, width, dtype),
+                           "bn": L.bn_init(width, dtype)})
+            c_in = width
+    key, k1 = jax.random.split(key)
+    params.append({"conv": L.conv_init(k1, 1, c_in, cfg.n_classes, dtype)})
+    return params
+
+
+def apply(params, x, cfg: MeshNetConfig,
+          shardings: ConvSharding | Sequence[ConvSharding],
+          mesh=None, overlap=True):
+    """x: (N, H, W, 18) -> per-pixel logits (N, H/64, W/64, n_classes)."""
+    n_layers = len(cfg.widths) * cfg.convs_per_block + 1
+    if isinstance(shardings, ConvSharding):
+        shardings = [shardings] * n_layers
+    li = 0
+    for b in range(len(cfg.widths)):
+        for i in range(cfg.convs_per_block):
+            sh = shardings[li]
+            stride = 2 if i == 0 else 1
+            x = L.conv_apply(params[li]["conv"], x, stride=stride,
+                             sharding=sh, mesh=mesh, overlap=overlap)
+            shb = sh.fit(x.shape[1], x.shape[2], 1, 1, mesh)
+            x = L.bn_apply(params[li]["bn"], x, sharding=shb, mesh=mesh,
+                           scope=cfg.bn_scope)
+            x = L.relu(x)
+            li += 1
+    x = L.conv_apply(params[li]["conv"], x, stride=1, sharding=shardings[li],
+                     mesh=mesh, overlap=overlap)
+    return x
+
+
+def loss_fn(params, batch, cfg: MeshNetConfig, shardings, mesh=None,
+            overlap=True):
+    """Per-pixel sigmoid BCE (semantic segmentation of tangling cells)."""
+    logits = apply(params, batch["image"], cfg, shardings, mesh, overlap)
+    labels = batch["label"]
+    logits = logits.astype(jnp.float32)
+    bce = jnp.maximum(logits, 0) - logits * labels \
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return jnp.mean(bce)
+
+
+def layer_specs(cfg: MeshNetConfig, n: int) -> list[ConvLayer]:
+    """Perf-model view (paper §V): one ConvLayer per conv."""
+    out = []
+    c_in, hw = cfg.in_channels, cfg.input_hw
+    for b, width in enumerate(cfg.widths):
+        for i in range(cfg.convs_per_block):
+            stride = 2 if i == 0 else 1
+            out.append(ConvLayer(f"conv{b+1}_{i+1}", n=n, c=c_in, h=hw, w=hw,
+                                 f=width, k=3, s=stride))
+            if stride == 2:
+                hw //= 2
+            c_in = width
+    out.append(ConvLayer("pred", n=n, c=c_in, h=hw, w=hw, f=cfg.n_classes,
+                         k=1, s=1))
+    return out

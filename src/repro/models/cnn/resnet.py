@@ -1,0 +1,191 @@
+"""ResNet-50 (He et al.) for ImageNet-1K — the paper's §VI-B2 workload.
+
+Functional implementation on the distribution-aware layers; every conv/pool
+accepts a ConvSharding so the whole network runs under sample, spatial or
+hybrid parallelism (paper Table III uses 32 samples per 1/2/4 GPUs).
+
+`resnet_graph` exports the branchy layer DAG consumed by the strategy
+optimizer's longest-path-first pass (paper §V-C).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import networkx as nx
+
+from repro.core.perfmodel import ConvLayer
+from repro.core.spatial_conv import ConvSharding
+from repro.models.cnn import layers as L
+
+STAGES = (3, 4, 6, 3)
+WIDTHS = (64, 128, 256, 512)
+EXPANSION = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet50"
+    input_hw: int = 224
+    in_channels: int = 3
+    n_classes: int = 1000
+    stages: tuple = STAGES
+    widths: tuple = WIDTHS
+    bn_scope: str = "local"
+
+
+RESNET50 = ResNetConfig()
+
+
+def _bottleneck_init(key, c_in, width, stride, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"conv1": L.conv_init(ks[0], 1, c_in, width, dtype),
+         "bn1": L.bn_init(width, dtype),
+         "conv2": L.conv_init(ks[1], 3, width, width, dtype),
+         "bn2": L.bn_init(width, dtype),
+         "conv3": L.conv_init(ks[2], 1, width, width * EXPANSION, dtype),
+         "bn3": L.bn_init(width * EXPANSION, dtype)}
+    if c_in != width * EXPANSION or stride != 1:
+        p["proj"] = L.conv_init(ks[3], 1, c_in, width * EXPANSION, dtype)
+        p["bn_proj"] = L.bn_init(width * EXPANSION, dtype)
+    return p
+
+
+def init(key, cfg: ResNetConfig = RESNET50, dtype=jnp.float32):
+    key, k1, k2 = jax.random.split(key, 3)
+    params = {"conv1": L.conv_init(k1, 7, cfg.in_channels, 64, dtype),
+              "bn1": L.bn_init(64, dtype),
+              "blocks": [],
+              "head": None}
+    c_in = 64
+    for s, (n_blocks, width) in enumerate(zip(cfg.stages, cfg.widths)):
+        for b in range(n_blocks):
+            key, kb = jax.random.split(key)
+            stride = 2 if (b == 0 and s > 0) else 1
+            params["blocks"].append(
+                _bottleneck_init(kb, c_in, width, stride, dtype))
+            c_in = width * EXPANSION
+    key, kh = jax.random.split(key)
+    params["head"] = L.dense_init(kh, c_in, cfg.n_classes, dtype)
+    return params
+
+
+def _bottleneck_apply(p, x, *, stride, sh: ConvSharding, mesh, scope,
+                      overlap):
+    def bn(pp, z):
+        shb = sh.fit(z.shape[1], z.shape[2], 1, 1, mesh)
+        return L.bn_apply(pp, z, sharding=shb, mesh=mesh, scope=scope)
+
+    y = L.conv_apply(p["conv1"], x, stride=1, sharding=sh, mesh=mesh,
+                     overlap=overlap)
+    y = L.relu(bn(p["bn1"], y))
+    y = L.conv_apply(p["conv2"], y, stride=stride, sharding=sh, mesh=mesh,
+                     overlap=overlap)
+    y = L.relu(bn(p["bn2"], y))
+    y = L.conv_apply(p["conv3"], y, stride=1, sharding=sh, mesh=mesh,
+                     overlap=overlap)
+    y = bn(p["bn3"], y)
+    if "proj" in p:
+        x = L.conv_apply(p["proj"], x, stride=stride, sharding=sh, mesh=mesh,
+                         overlap=overlap)
+        x = bn(p["bn_proj"], x)
+    return L.relu(x + y)
+
+
+def apply(params, x, cfg: ResNetConfig = RESNET50,
+          sharding: ConvSharding = ConvSharding(), mesh=None, overlap=True):
+    """x: (N, H, W, 3) -> logits (N, n_classes)."""
+    sh = sharding
+    x = L.conv_apply(params["conv1"], x, stride=2, sharding=sh, mesh=mesh,
+                     overlap=overlap)
+    shb = sh.fit(x.shape[1], x.shape[2], 1, 1, mesh)
+    x = L.relu(L.bn_apply(params["bn1"], x, sharding=shb, mesh=mesh,
+                          scope=cfg.bn_scope))
+    x = L.max_pool(x, window=3, stride=2, sharding=sh, mesh=mesh)
+    bi = 0
+    for s, (n_blocks, width) in enumerate(zip(cfg.stages, cfg.widths)):
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            x = _bottleneck_apply(params["blocks"][bi], x, stride=stride,
+                                  sh=sh, mesh=mesh, scope=cfg.bn_scope,
+                                  overlap=overlap)
+            bi += 1
+    x = L.global_avg_pool(x, sharding=sh.fit(x.shape[1], x.shape[2], 1, 1,
+                                             mesh), mesh=mesh)
+    return L.dense_apply(params["head"], x)
+
+
+def loss_fn(params, batch, cfg: ResNetConfig = RESNET50,
+            sharding: ConvSharding = ConvSharding(), mesh=None, overlap=True):
+    logits = apply(params, batch["image"], cfg, sharding, mesh, overlap)
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, batch["label"][:, None], axis=1)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# perf-model / strategy views
+# ---------------------------------------------------------------------------
+
+def layer_specs(n: int, cfg: ResNetConfig = RESNET50) -> list[ConvLayer]:
+    """Flat (main-path) conv list for the line-network perf model."""
+    out = [ConvLayer("conv1", n=n, c=cfg.in_channels, h=cfg.input_hw,
+                     w=cfg.input_hw, f=64, k=7, s=2)]
+    hw = cfg.input_hw // 4           # conv1 /2, maxpool /2
+    out.append(ConvLayer("pool1", n=n, c=64, h=cfg.input_hw // 2,
+                         w=cfg.input_hw // 2, f=64, k=3, s=2, kind="pool"))
+    c_in = 64
+    for s, (n_blocks, width) in enumerate(zip(cfg.stages, cfg.widths)):
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            pre = f"res{s+2}{chr(ord('a')+b)}_branch2"
+            out.append(ConvLayer(pre + "a", n=n, c=c_in, h=hw, w=hw,
+                                 f=width, k=1, s=1))
+            out.append(ConvLayer(pre + "b", n=n, c=width, h=hw, w=hw,
+                                 f=width, k=3, s=stride))
+            hw2 = hw // stride
+            out.append(ConvLayer(pre + "c", n=n, c=width, h=hw2, w=hw2,
+                                 f=width * EXPANSION, k=1, s=1))
+            hw = hw2
+            c_in = width * EXPANSION
+    return out
+
+
+def resnet_graph(n: int, cfg: ResNetConfig = RESNET50) -> nx.DiGraph:
+    """Branchy DAG (residual shortcuts included) for §V-C longest-path-first."""
+    g = nx.DiGraph()
+    specs = layer_specs(n, cfg)
+    prev = None
+    idx = 0
+
+    def add(node, layer):
+        g.add_node(node, layer=layer)
+
+    add("conv1", specs[0]); add("pool1", specs[1])
+    g.add_edge("conv1", "pool1")
+    prev = "pool1"
+    i = 2
+    c_in, hw = 64, cfg.input_hw // 4
+    for s, (n_blocks, width) in enumerate(zip(cfg.stages, cfg.widths)):
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            names = [specs[i].name, specs[i + 1].name, specs[i + 2].name]
+            for j in range(3):
+                add(names[j], specs[i + j])
+            g.add_edge(prev, names[0])
+            g.add_edge(names[0], names[1])
+            g.add_edge(names[1], names[2])
+            if c_in != width * EXPANSION:
+                pname = f"res{s+2}{chr(ord('a')+b)}_branch1"
+                add(pname, ConvLayer(pname, n=n, c=c_in, h=hw, w=hw,
+                                     f=width * EXPANSION, k=1, s=stride))
+                g.add_edge(prev, pname)
+                g.add_edge(pname, names[2])
+            hw //= stride
+            c_in = width * EXPANSION
+            prev = names[2]
+            i += 3
+    return g

@@ -1,0 +1,436 @@
+"""Generic LM: dense / MoE / SSM / hybrid / enc-dec / VLM-backbone.
+
+Layer stacks are executed as lax.scan over *stacked* parameters, segmented
+by block type:
+
+  * uniform stacks (qwen, olmo, mixtral, mamba2, ...) — one scan;
+  * period-2 alternation (gemma2 local/global) — one scan whose body holds
+    both layer kinds;
+  * fixed global islands (hymba layers {0, mid, last}) — scans between
+    unrolled singletons.
+
+This keeps the lowered HLO O(1) in depth — required for the 512-device AOT
+dry-runs and for sane compile times at production scale.
+
+Sequence parallelism (the paper's spatial decomposition) threads through
+ShardCtx into ring attention / SSD state-passing / windowed-halo attention;
+everything else is pointwise in S.  Decoding uses the sequence-sharded KV
+cache (core.decode_attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.decode_attention import cache_append, decode_attention
+from repro.models.lm.config import LMConfig
+from repro.models.lm import modules as M
+from repro.models.lm.modules import ShardCtx
+
+Segment = tuple[tuple[str, ...], int]
+
+
+def plan(cfg: LMConfig, types: list[str] | None = None) -> list[Segment]:
+    types = types if types is not None else cfg.layer_types()
+    if len(set(types)) > 1 and len(types) % 2 == 0:
+        unit = tuple(types[:2])
+        if types == list(unit) * (len(types) // 2):
+            return [(unit, len(types) // 2)]
+    segs: list[Segment] = []
+    for t in types:
+        if segs and segs[-1][0] == (t,):
+            segs[-1] = ((t,), segs[-1][1] + 1)
+        else:
+            segs.append(((t,), 1))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: LMConfig, btype: str, dtype):
+    p: dict[str, Any] = {"ln1": M.norm_init(cfg, cfg.d_model)}
+    keys = jax.random.split(key, 6)
+    has_attn = btype in ("attn", "swa", "enc", "xattn") \
+        or btype.startswith("hybrid")
+    if has_attn:
+        p["attn"] = M.attn_init(keys[0], cfg, dtype)
+    if btype.startswith("hybrid") or btype == "ssm":
+        p["ssm"] = M.ssm_init(keys[1], cfg, dtype)
+    if btype.startswith("hybrid"):
+        p["fuse_attn"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["fuse_ssm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if btype == "xattn":
+        p["ln_cross"] = M.norm_init(cfg, cfg.d_model)
+        p["cross"] = M.attn_init(keys[2], cfg, dtype)
+    if cfg.sandwich_norm:
+        p["ln1_post"] = M.norm_init(cfg, cfg.d_model)
+    has_mlp = cfg.d_ff > 0 and btype != "ssm"
+    if has_mlp:
+        p["ln2"] = M.norm_init(cfg, cfg.d_model)
+        if cfg.n_experts:
+            p["moe"] = M.moe_init(keys[3], cfg, dtype)
+        else:
+            p["mlp"] = M.mlp_init(keys[3], cfg, dtype)
+        if cfg.sandwich_norm:
+            p["ln2_post"] = M.norm_init(cfg, cfg.d_model)
+    return p
+
+
+def _segment_init(key, cfg: LMConfig, seg: Segment, dtype):
+    unit, count = seg
+    keys = jax.random.split(key, count)
+
+    def one(k):
+        ks = jax.random.split(k, len(unit))
+        return tuple(_block_init(ks[i], cfg, bt, dtype)
+                     for i, bt in enumerate(unit))
+    return jax.vmap(one)(keys)
+
+
+def init(key, cfg: LMConfig, dtype=jnp.float32):
+    k_emb, k_dec, k_enc, k_fr = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), dtype)
+        / math.sqrt(cfg.d_model),
+        "final_norm": M.norm_init(cfg, cfg.d_model),
+        "segments": [],
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = jax.random.normal(
+            jax.random.fold_in(k_emb, 1), (cfg.d_model, cfg.vocab), dtype) \
+            / math.sqrt(cfg.d_model)
+    segs = plan(cfg)
+    keys = jax.random.split(k_dec, len(segs))
+    for k, seg in zip(keys, segs):
+        params["segments"].append(_segment_init(k, cfg, seg, dtype))
+    if cfg.is_encdec:
+        enc_segs = plan(cfg, ["enc"] * cfg.n_enc_layers)
+        ekeys = jax.random.split(k_enc, len(enc_segs))
+        params["enc_segments"] = [
+            _segment_init(k, cfg, s, dtype) for k, s in zip(ekeys, enc_segs)]
+        params["enc_final_norm"] = M.norm_init(cfg, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _block_apply(p, x, btype: str, cfg: LMConfig, ctx: ShardCtx, positions,
+                 memory=None, collect_kv=False):
+    h = M.norm_apply(cfg, p["ln1"], x)
+    window = cfg.window if btype in ("swa", "hybrid_s") else None
+    causal = btype != "enc"
+    kv = None
+    if btype == "ssm":
+        out = M.ssm_apply(p["ssm"], h, cfg, ctx)
+    elif btype.startswith("hybrid"):
+        a_out, kv = M.attn_apply(p["attn"], h, cfg=cfg, ctx=ctx,
+                                 positions=positions, window=window,
+                                 causal=True, return_kv=True)
+        s_out = M.ssm_apply(p["ssm"], h, cfg, ctx)
+        out = 0.5 * (M.norm_apply(cfg, p["fuse_attn"], a_out)
+                     + M.norm_apply(cfg, p["fuse_ssm"], s_out))
+    else:
+        out, kv = M.attn_apply(p["attn"], h, cfg=cfg, ctx=ctx,
+                               positions=positions, window=window,
+                               causal=causal, return_kv=True)
+    if cfg.sandwich_norm:
+        out = M.norm_apply(cfg, p["ln1_post"], out)
+    x = x + out
+
+    if btype == "xattn":
+        hc = M.norm_apply(cfg, p["ln_cross"], x)
+        mem_kv = _cross_kv(p["cross"], cfg, memory)
+        c_out = M.attn_apply(p["cross"], hc, cfg=cfg, ctx=ctx,
+                             positions=positions, window=None, causal=False,
+                             kv_override=mem_kv)
+        x = x + c_out
+
+    if cfg.d_ff > 0 and btype != "ssm":
+        h = M.norm_apply(cfg, p["ln2"], x)
+        if cfg.n_experts:
+            out = M.moe_apply(p["moe"], h, cfg, ctx)
+        else:
+            out = M.mlp_apply(p["mlp"], h, cfg)
+        if cfg.sandwich_norm:
+            out = M.norm_apply(cfg, p["ln2_post"], out)
+        x = x + out
+    return x, (kv if collect_kv else None)
+
+
+def _cross_kv(p, cfg: LMConfig, memory):
+    """K/V of the encoder memory (no rope on cross-attention)."""
+    b, s, _ = memory.shape
+    k = (memory @ p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (memory @ p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qkv_bias:
+        k = k + p["bk"].reshape(cfg.n_kv_heads, cfg.head_dim)
+        v = v + p["bv"].reshape(cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def _run_segments(segments, seg_params, x, cfg, ctx, positions, memory=None,
+                  remat=True, collect_kv=False, unroll=False):
+    all_kv = []
+    for seg, sp in zip(segments, seg_params):
+        unit, count = seg
+
+        def body(xc, pslice):
+            kvs = []
+            for bt, bp in zip(unit, pslice):
+                xc, kv = _block_apply(bp, xc, bt, cfg, ctx, positions,
+                                      memory=memory, collect_kv=collect_kv)
+                kvs.append(kv)
+            return xc, (tuple(kvs) if collect_kv else None)
+
+        fn = jax.checkpoint(body) if remat else body
+        x, kv = lax.scan(fn, x, sp, unroll=count if unroll else 1)
+        all_kv.append(kv)
+    return x, all_kv
+
+
+# ---------------------------------------------------------------------------
+# forward / loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: LMConfig, tokens, extra_embeds=None):
+    x = params["embed"][tokens]
+    if cfg.scale_embedding:
+        x = x * math.sqrt(cfg.d_model)
+    if extra_embeds is not None:       # modality frontend stub: prefix
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _logits(params, cfg: LMConfig, x):
+    emb = params.get("unembed",
+                     params["embed"].T if cfg.tie_embeddings else None)
+    logits = x @ emb
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def encode(params, cfg: LMConfig, frames, ctx: ShardCtx, remat=True,
+           unroll=False):
+    """Encoder stack over frontend embeddings (audio stub input)."""
+    positions = jnp.arange(frames.shape[1])
+    x = frames
+    enc_segs = plan(cfg, ["enc"] * cfg.n_enc_layers)
+    x, _ = _run_segments(enc_segs, params["enc_segments"], x, cfg, ctx,
+                         positions, remat=remat, unroll=unroll)
+    return M.norm_apply(cfg, params["enc_final_norm"], x)
+
+
+def forward(params, cfg: LMConfig, tokens, ctx: ShardCtx = ShardCtx(),
+            extra_embeds=None, frames=None, remat=True, collect_kv=False,
+            unroll=False):
+    """tokens: (B, S_text).  Returns logits (B, S, V) (and caches)."""
+    memory = None
+    if cfg.is_encdec:
+        assert frames is not None, "enc-dec needs encoder frames"
+        memory = encode(params, cfg, frames, ctx, remat=remat,
+                        unroll=unroll)
+    x = _embed(params, cfg, tokens, extra_embeds)
+    positions = jnp.arange(x.shape[1])
+    x, kv = _run_segments(plan(cfg), params["segments"], x, cfg, ctx,
+                          positions, memory=memory, remat=remat,
+                          collect_kv=collect_kv, unroll=unroll)
+    x = M.norm_apply(cfg, params["final_norm"], x)
+    logits = _logits(params, cfg, x)
+    if collect_kv:
+        return logits, kv, memory
+    return logits
+
+
+def loss_fn(params, batch, cfg: LMConfig, ctx: ShardCtx = ShardCtx(),
+            remat=True, unroll=False, vocab_parallel=False):
+    """Next-token cross entropy.  batch: tokens/labels (+frames/embeds).
+
+    vocab_parallel=True uses the sharded-embedding lookup + streaming CE
+    (models/lm/vocab_parallel.py) — no global logits tensor; requires the
+    embedding (and unembed) sharded on V over the model axis.
+    """
+    if vocab_parallel:
+        return _loss_vocab_parallel(params, batch, cfg, ctx, remat, unroll)
+    logits = forward(params, cfg, batch["tokens"], ctx,
+                     extra_embeds=batch.get("patch_embeds"),
+                     frames=batch.get("frames"), remat=remat,
+                     unroll=unroll)
+    labels = batch["labels"]
+    # frontend prefix positions carry no label: score the text tail only
+    logits = logits[:, -labels.shape[1]:]
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def _loss_vocab_parallel(params, batch, cfg: LMConfig, ctx: ShardCtx,
+                         remat, unroll):
+    from repro.models.lm import vocab_parallel as VP
+    memory = None
+    if cfg.is_encdec:
+        memory = encode(params, cfg, batch["frames"], ctx, remat=remat,
+                        unroll=unroll)
+    x = VP.embed_lookup(params["embed"], cfg, batch["tokens"], ctx)
+    if cfg.scale_embedding:
+        x = x * math.sqrt(cfg.d_model)
+    extra = batch.get("patch_embeds")
+    labels = batch["labels"]
+    if extra is not None:
+        x = jnp.concatenate([extra.astype(x.dtype), x], axis=1)
+        labels = jnp.concatenate(
+            [jnp.full(extra.shape[:2], -1, labels.dtype), labels], axis=1)
+    positions = jnp.arange(x.shape[1])
+    x, _ = _run_segments(plan(cfg), params["segments"], x, cfg, ctx,
+                         positions, memory=memory, remat=remat,
+                         unroll=unroll)
+    x = M.norm_apply(cfg, params["final_norm"], x)
+    table = params["unembed"].T if "unembed" in params else params["embed"]
+    return VP.xent_loss(table, cfg, x, labels, ctx)
+
+
+# -------------------------- serving --------------------------------------
+
+def _kv_cache_spec(ctx: ShardCtx):
+    return P(tuple(ctx.batch_axes) or None, ctx.seq_axis, None, None)
+
+
+def prefill(params, cfg: LMConfig, tokens, ctx: ShardCtx = ShardCtx(),
+            extra_embeds=None, frames=None, unroll=False):
+    """Run the full prompt, returning (last-position logits, kv caches).
+
+    Caches come back stacked per segment: (count, B, S, Hkv, hd) — sharded
+    along S over the model axis (the paper's decomposition applied to the
+    KV cache)."""
+    logits, kv, memory = forward(params, cfg, tokens, ctx,
+                                 extra_embeds=extra_embeds, frames=frames,
+                                 remat=False, collect_kv=True,
+                                 unroll=unroll)
+    return logits[:, -1:], kv, memory
+
+
+def init_decode_state(params, cfg: LMConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    """Empty caches for decode-from-scratch (or shapes for the dry-run)."""
+    state = []
+    for unit, count in plan(cfg):
+        seg = []
+        for bt in unit:
+            entry = {}
+            if bt in ("attn", "swa", "xattn") or bt.startswith("hybrid"):
+                entry["k"] = jnp.zeros(
+                    (count, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                    dtype)
+                entry["v"] = jnp.zeros_like(entry["k"])
+            if bt == "ssm" or bt.startswith("hybrid"):
+                entry["ssm"] = jnp.zeros(
+                    (count, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                     cfg.ssm_state), jnp.float32)
+                entry["conv"] = jnp.zeros(
+                    (count, batch, cfg.ssm_conv - 1,
+                     cfg.d_inner + 2 * cfg.ssm_state), dtype)
+            seg.append(entry)
+        state.append(tuple(seg))
+    return state
+
+
+def decode_step(params, cfg: LMConfig, tokens, caches, length,
+                ctx: ShardCtx = ShardCtx(), memory=None, unroll=False):
+    """One greedy decode step.  tokens: (B, 1) current token ids;
+    caches: from init_decode_state/prefill; length: current filled length.
+    Returns (next-token logits, updated caches)."""
+    x = _embed(params, cfg, tokens)
+    positions = jnp.full((tokens.shape[0], 1), length, jnp.int32)
+    scale = cfg.attn_scale or 1.0 / math.sqrt(max(cfg.head_dim, 1))
+
+    new_caches = []
+    for (unit, count), sp, cache in zip(plan(cfg), params["segments"],
+                                        caches):
+        def body(xc, sliced):
+            pslice, cslice = sliced
+            new_c = []
+            for bt, bp, bc in zip(unit, pslice, cslice):
+                xc, nc = _decode_block(bp, xc, bt, cfg, ctx, positions,
+                                       length, bc, scale, memory)
+                new_c.append(nc)
+            return xc, tuple(new_c)
+
+        x, upd = lax.scan(body, x, (sp, cache),
+                          unroll=count if unroll else 1)
+        new_caches.append(upd)
+
+    x = M.norm_apply(cfg, params["final_norm"], x)
+    return _logits(params, cfg, x), new_caches
+
+
+def _decode_block(p, x, btype, cfg: LMConfig, ctx: ShardCtx, positions,
+                  length, cache, scale, memory=None):
+    h = M.norm_apply(cfg, p["ln1"], x)
+    window = cfg.window if btype in ("swa", "hybrid_s") else None
+    new_cache = dict(cache)
+
+    def attend(h):
+        q, k, v = M.attn_qkv(p["attn"], cfg, h, positions)
+        kc, vc = cache_append(cache["k"], cache["v"], k, v, length,
+                              mesh=ctx.mesh, seq_axis=ctx.seq_axis,
+                              batch_axes=ctx.batch_axes)
+        o = decode_attention(q, kc, vc, length + 1, mesh=ctx.mesh,
+                             seq_axis=ctx.seq_axis, scale=scale,
+                             window=window, softcap=cfg.attn_softcap,
+                             batch_axes=ctx.batch_axes)
+        b = h.shape[0]
+        out = o.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ p["attn"]["wo"]
+        return out, kc, vc
+
+    if btype == "ssm":
+        out, st, buf = M.ssm_decode_step(p["ssm"], h, cfg, cache["ssm"],
+                                         cache["conv"])
+        new_cache.update(ssm=st, conv=buf)
+    elif btype.startswith("hybrid"):
+        a_out, kc, vc = attend(h)
+        s_out, st, buf = M.ssm_decode_step(p["ssm"], h, cfg, cache["ssm"],
+                                           cache["conv"])
+        out = 0.5 * (M.norm_apply(cfg, p["fuse_attn"], a_out)
+                     + M.norm_apply(cfg, p["fuse_ssm"], s_out))
+        new_cache.update(k=kc, v=vc, ssm=st, conv=buf)
+    else:
+        out, kc, vc = attend(h)
+        new_cache.update(k=kc, v=vc)
+    if cfg.sandwich_norm:
+        out = M.norm_apply(cfg, p["ln1_post"], out)
+    x = x + out
+
+    if btype == "xattn" and memory is not None:
+        hc = M.norm_apply(cfg, p["ln_cross"], x)
+        mk, mv = _cross_kv(p["cross"], cfg, memory)
+        b = hc.shape[0]
+        qc = (hc @ p["cross"]["wq"])
+        if cfg.qkv_bias:
+            qc = qc + p["cross"]["bq"]
+        qc = qc.reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        oc = decode_attention(qc, mk, mv, jnp.int32(memory.shape[1]),
+                              mesh=ctx.mesh, seq_axis=ctx.seq_axis,
+                              scale=scale, batch_axes=ctx.batch_axes)
+        x = x + oc.reshape(b, 1, cfg.n_heads * cfg.head_dim) \
+            @ p["cross"]["wo"]
+
+    if cfg.d_ff > 0 and btype != "ssm":
+        h = M.norm_apply(cfg, p["ln2"], x)
+        out = M.moe_apply(p["moe"], h, cfg, ctx) if cfg.n_experts \
+            else M.mlp_apply(p["mlp"], h, cfg)
+        if cfg.sandwich_norm:
+            out = M.norm_apply(cfg, p["ln2_post"], out)
+        x = x + out
+    return x, new_cache

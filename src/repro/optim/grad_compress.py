@@ -1,0 +1,111 @@
+"""Gradient compression for cross-pod data-parallel reduction.
+
+On the multi-pod mesh the `pod` axis crosses the slow DCN fabric; the
+gradient allreduce there is the dominant inter-pod collective.  Two
+compressors:
+
+  * bf16: cast-reduce-cast (2x), error-free in practice for gradients.
+  * int8 + error feedback: per-tensor-block scale, residual carried in the
+    optimizer state so quantization error is re-injected next step (1-bit
+    Adam-style EF); 4x over fp32, 2x over bf16.
+
+The compressed reduction runs in a *partial-manual* shard_map: manual over
+`pod` only, so the intra-pod program stays under the automatic partitioner
+while the pod reduction is an explicit psum over quantized payloads with
+fp32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+def _quantize_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def cross_pod_mean(grads, *, mesh, method: str = "bf16",
+                   error_feedback: Any = None):
+    """Average gradients across the pod axis with optional compression.
+
+    grads: pytree of per-pod gradients (replicated/sharded over data/model,
+    varying over pod).  Returns (reduced grads, new error-feedback state).
+    """
+    if "pod" not in mesh.axis_names:
+        return grads, error_feedback
+    npods = dict(mesh.shape)["pod"]
+
+    def _vary(x):
+        # psum of a pod-INVARIANT operand crashes this XLA version
+        # ("Invalid binary instruction opcode copy"); marking the operand
+        # varying first is free and matches the real (per-pod grads) use.
+        return lax.pcast(x, "pod", to="varying")
+
+    if method == "none":
+        f = lambda g: jax.tree.map(
+            lambda x: lax.psum(_vary(x), "pod") / npods, g)
+        out = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                            axis_names={"pod"})(grads)
+        return out, error_feedback
+
+    if method == "bf16":
+        # bf16 payload on the wire via all-gather + local fp32 mean (the
+        # bf16 all-reduce instruction itself crashes this XLA CPU build).
+        def f(g):
+            def one(x):
+                xs = lax.all_gather(_vary(x.astype(jnp.bfloat16)), "pod")
+                return (jnp.sum(xs.astype(jnp.float32), 0)
+                        / npods).astype(x.dtype)
+            return jax.tree.map(one, g)
+        out = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                            axis_names={"pod"}, check_vma=False)(grads)
+        return out, error_feedback
+
+    if method == "int8_ef":
+        # The EF residual is genuinely per-pod state: it carries a leading
+        # pod dimension sharded over the pod axis.
+        if error_feedback is None:
+            error_feedback = jax.tree.map(
+                lambda g: jnp.zeros((npods,) + g.shape, jnp.float32), grads)
+
+        def f(g, ef):
+            def one(x, e):
+                x32 = x.astype(jnp.float32) + e[0]
+                q, scale = _quantize_int8(x32)
+                new_e = x32 - _dequantize(q, scale)  # residual, next step
+                # true int8 payload on the wire: all-gather the quantized
+                # blocks + their scales, dequantize and average locally.
+                qs = lax.all_gather(q, "pod")            # (npods, ...)
+                ss = lax.all_gather(scale, "pod")        # (npods,)
+                red = jnp.mean(
+                    qs.astype(jnp.float32)
+                    * ss.reshape((npods,) + (1,) * x.ndim), axis=0)
+                # every pod computes the identical mean of identical
+                # gathered payloads, so the result is pod-invariant by
+                # construction (check_vma can't prove this -> disabled).
+                return red.astype(x.dtype), new_e[None]
+            flat, treedef = jax.tree.flatten(g)
+            eflat = jax.tree.leaves(ef)
+            out = [one(x, e) for x, e in zip(flat, eflat)]
+            return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+                    jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+        efspec = jax.tree.map(lambda _: P("pod"), grads)
+        gspec = jax.tree.map(lambda _: P(), grads)
+        out, new_ef = jax.shard_map(
+            f, mesh=mesh, in_specs=(gspec, efspec), out_specs=(gspec, efspec),
+            axis_names={"pod"}, check_vma=False)(grads, error_feedback)
+        return out, new_ef
+
+    raise ValueError(f"unknown compression method {method!r}")

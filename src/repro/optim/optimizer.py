@@ -1,0 +1,107 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+SGD-momentum (the paper's CNN training) and AdamW (LM substrate), with
+warmup+cosine schedules and global-norm clipping.  Optimizer state inherits
+the parameters' sharding (ZeRO-1 falls out of FSDP-sharded params: each
+device only materializes its shard of momentum/variance).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any          # first moment / momentum
+    nu: Any          # second moment (None for SGD)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple[Any, OptState]]
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def sgd(lr: float | Callable, momentum: float = 0.9,
+        weight_decay: float = 0.0, nesterov: bool = False,
+        clip_norm: float | None = None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(jnp.zeros_like, params), None)
+
+    def update(grads, state, params):
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                 grads, params)
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+        upd = jax.tree.map(lambda m, g: momentum * m + g, mu, grads) \
+            if nesterov else mu
+        step = state.step + 1
+        lrv = lr_fn(step)
+        new = jax.tree.map(lambda p, u: p - lrv * u, params, upd)
+        return new, OptState(step, mu, None)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: float | None = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def update(grads, state, params):
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        lrv = lr_fn(step)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return (p - lrv * (u + weight_decay * p.astype(jnp.float32))
+                    .astype(p.dtype)).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, mu, nu)
+        return new, OptState(step, mu, nu)
+
+    return Optimizer(init, update)

@@ -1,0 +1,73 @@
+"""Shared small utilities."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def same_pads(k: int, s: int) -> tuple[int, int]:
+    """TF/XLA 'SAME' padding amounts for kernel k, stride s, size % s == 0."""
+    total = max(k - s, 0)
+    lo = total // 2
+    return lo, total - lo
+
+
+def tree_size_bytes(tree: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_num_params(tree: Any) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"
+
+
+def human_count(n: float) -> str:
+    for unit in ("", "K", "M", "B", "T"):
+        if abs(n) < 1000.0:
+            return f"{n:.2f}{unit}"
+        n /= 1000.0
+    return f"{n:.2f}Q"
+
+
+def assert_no_nans(tree: Any, where: str = "") -> None:
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if np.isnan(arr).any():
+            raise AssertionError(f"NaN in {where}{jax.tree_util.keystr(path)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """Mixed-precision policy."""
+    param_dtype: Any = jnp.float32     # master weights
+    compute_dtype: Any = jnp.bfloat16  # activations / matmul inputs
+    accum_dtype: Any = jnp.float32     # softmax / loss / BN stats
+
+    def cast_compute(self, tree):
+        return jax.tree.map(
+            lambda x: x.astype(self.compute_dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+FP32 = Precision(jnp.float32, jnp.float32, jnp.float32)
+BF16 = Precision(jnp.float32, jnp.bfloat16, jnp.float32)

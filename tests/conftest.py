@@ -1,0 +1,28 @@
+"""Test config.  The main pytest process keeps ONE CPU device — multi-device
+checks run in subprocesses (tests/dist_checks.py), and the 512-device env is
+reserved for the dry-run (launch/dryrun.py)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_dist_group(group: str, timeout: int = 560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "dist_checks.py"),
+         group],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO)
+    if r.returncode != 0:
+        raise AssertionError(
+            f"dist_checks {group} failed:\n{r.stdout}\n{r.stderr[-4000:]}")
+
+
+@pytest.fixture(scope="session")
+def repo_root():
+    return REPO

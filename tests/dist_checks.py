@@ -1,0 +1,353 @@
+"""Multi-device distributed checks, run in a subprocess so the main pytest
+process keeps a single CPU device (the 512-device env is dry-run-only).
+
+Usage:  python tests/dist_checks.py <group>
+Groups: conv | attention | ssm | models | train | compress
+Exits 0 on success; any assertion failure exits non-zero.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import functools  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax import lax  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.utils import same_pads  # noqa: E402
+
+
+def oracle_conv(x, w, s):
+    kh, kw = w.shape[0], w.shape[1]
+    return lax.conv_general_dilated(
+        x, w, (s, s), (same_pads(kh, s), same_pads(kw, s)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def check_conv():
+    from repro.core.spatial_conv import spatial_conv2d, spatial_pool, \
+        ConvSharding
+    mesh = make_mesh(data=2, model=4)
+    key = jax.random.PRNGKey(0)
+    for (K, s, H, W, C, F) in [(3, 1, 16, 12, 5, 7), (7, 2, 32, 16, 3, 8),
+                               (1, 1, 16, 8, 4, 4), (3, 2, 16, 16, 6, 6)]:
+        x = jax.random.normal(key, (4, H, W, C), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (K, K, C, F)) * 0.1
+        ref = oracle_conv(x, w, s)
+        for overlap in (False, True):
+            sh = ConvSharding(batch_axes=("data",), h_axis="model")
+            with mesh:
+                got = jax.jit(lambda x, w: spatial_conv2d(
+                    x, w, strides=(s, s), sharding=sh, mesh=mesh,
+                    overlap=overlap))(x, w)
+                np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                           rtol=2e-5, atol=2e-5)
+                gd = jax.jit(jax.grad(lambda x, w: jnp.sum(spatial_conv2d(
+                    x, w, strides=(s, s), sharding=sh, mesh=mesh,
+                    overlap=overlap) ** 2), argnums=(0, 1)))(x, w)
+            gr = jax.grad(lambda x, w: jnp.sum(oracle_conv(x, w, s) ** 2),
+                          argnums=(0, 1))(x, w)
+            for a, b in zip(gd, gr):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=3e-4, atol=3e-4)
+    # pooling (max needs -inf edge halo) and 2-D H x W decomposition
+    x = jax.random.normal(key, (4, 32, 16, 5), jnp.float32)
+    for kind in ("max", "avg"):
+        sh = ConvSharding(batch_axes=("data",), h_axis="model")
+        with mesh:
+            got = jax.jit(lambda x: spatial_pool(
+                x, window=(3, 3), strides=(2, 2), sharding=sh, mesh=mesh,
+                kind=kind))(x)
+        ref = spatial_pool(x, window=(3, 3), strides=(2, 2),
+                           sharding=ConvSharding(), kind=kind)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+    sh2 = ConvSharding(batch_axes=(), h_axis="model", w_axis="data")
+    x = jax.random.normal(key, (2, 16, 16, 3), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 3, 5)) * 0.1
+    with mesh:
+        got = jax.jit(lambda x, w: spatial_conv2d(
+            x, w, strides=(1, 1), sharding=sh2, mesh=mesh))(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle_conv(
+        x, w, 1)), rtol=2e-5, atol=2e-5)
+    # spatially-aggregated batch norm == global stats over the shards
+    from repro.core.spatial_norm import batch_norm
+    sh = ConvSharding(batch_axes=("data",), h_axis="model")
+    x = jax.random.normal(key, (4, 16, 8, 6), jnp.float32) * 3 + 1
+    g = jnp.ones((6,)); b = jnp.zeros((6,))
+    with mesh:
+        got = jax.jit(lambda x: batch_norm(
+            x, g, b, sharding=sh, mesh=mesh, scope="global"))(x)
+    ref = batch_norm(x, g, b, sharding=ConvSharding(), scope="local")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def check_attention():
+    from repro.core.ring_attention import ring_attention
+    from repro.core.decode_attention import decode_attention, cache_append
+    mesh = make_mesh(data=2, model=4)
+    key = jax.random.PRNGKey(0)
+    B, S, Hq, Hkv, D = 2, 32, 8, 4, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    for causal, window, cap in [(True, None, None), (True, 7, None),
+                                (False, None, None), (True, 12, 30.0)]:
+        ref = ring_attention(q, k, v, mesh=None, seq_axis=None,
+                             causal=causal, window=window, softcap=cap)
+        with mesh:
+            got = jax.jit(lambda q, k, v: ring_attention(
+                q, k, v, mesh=mesh, seq_axis="model", causal=causal,
+                window=window, softcap=cap))(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+    qd = jax.random.normal(ks[0], (B, 1, Hq, D))
+    L = jnp.int32(23)
+    for window in (None, 6):
+        ref = decode_attention(qd, k, v, L, mesh=None, seq_axis=None,
+                               window=window)
+        with mesh:
+            got = jax.jit(lambda q, k, v, L: decode_attention(
+                q, k, v, L, mesh=mesh, seq_axis="model",
+                window=window))(qd, k, v, L)
+            # multi-axis sequence sharding (long_500k layout)
+            got2 = jax.jit(lambda q, k, v, L: decode_attention(
+                q, k, v, L, mesh=mesh, seq_axis=("data", "model"),
+                batch_axes=(), window=window))(qd, k, v, L)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(got2), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+    kn = jax.random.normal(ks[1], (B, 1, Hkv, D))
+    vn = jax.random.normal(ks[2], (B, 1, Hkv, D))
+    kr, vr = cache_append(k, v, kn, vn, 23, mesh=None, seq_axis=None)
+    with mesh:
+        kg, vg = jax.jit(lambda *a: cache_append(
+            *a, mesh=mesh, seq_axis="model"))(k, v, kn, vn, jnp.int32(23))
+    np.testing.assert_allclose(np.asarray(kg), np.asarray(kr))
+    np.testing.assert_allclose(np.asarray(vg), np.asarray(vr))
+
+
+def check_ssm():
+    from repro.core.seq_ssm import seq_prefix_state
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 2)
+    B, H, dh, ds = 2, 3, 4, 5
+    a = jax.random.uniform(ks[0], (8, B, H, 1, 1), minval=0.5, maxval=0.99)
+    s = jax.random.normal(ks[1], (8, B, H, dh, ds))
+    st = jnp.zeros_like(s[0])
+    outs = []
+    for i in range(8):
+        outs.append(st)
+        st = st * a[i] + s[i]
+    ref = jnp.stack(outs)
+    mesh1 = make_mesh(data=1, model=8)
+    with mesh1:
+        f = jax.shard_map(
+            lambda a, s: seq_prefix_state(a[0], s[0], "model", 8)[None],
+            mesh=mesh1, in_specs=(P("model"), P("model")),
+            out_specs=P("model"))
+        got = jax.jit(f)(a, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def check_models():
+    from repro.configs import registry
+    from repro.models.lm import transformer as T
+    from repro.models.lm.modules import ShardCtx
+    from repro.data.pipeline import synthetic_lm_batch
+    mesh = make_mesh(data=2, model=4)
+    ctx = ShardCtx(mesh=mesh, seq_axis="model", batch_axes=("data",))
+    for a in ["gemma2_9b", "mixtral_8x7b", "mamba2_780m", "hymba_1_5b",
+              "seamless_m4t_large_v2"]:
+        cfg = registry.get(a, smoke=True)
+        params = T.init(jax.random.PRNGKey(0), cfg)
+        B, S = 2, 64
+        batch = {k: jnp.asarray(v) for k, v in
+                 synthetic_lm_batch(0, B, S, cfg.vocab).items()}
+        if cfg.frontend == "audio_stub":
+            batch["frames"] = jax.random.normal(
+                jax.random.PRNGKey(1), (B, S, cfg.d_model))
+        ref = T.loss_fn(params, batch, cfg, ShardCtx(), remat=False)
+        with mesh:
+            sb = dict(batch)
+            sb["tokens"] = jax.device_put(
+                batch["tokens"], NamedSharding(mesh, P("data", "model")))
+            sb["labels"] = jax.device_put(
+                batch["labels"], NamedSharding(mesh, P("data", "model")))
+            if "frames" in sb:
+                sb["frames"] = jax.device_put(
+                    batch["frames"],
+                    NamedSharding(mesh, P("data", "model", None)))
+            got = jax.jit(lambda p, b: T.loss_fn(
+                p, b, cfg, ctx, remat=False))(params, sb)
+        np.testing.assert_allclose(float(got), float(ref), rtol=2e-5)
+    # ring vocab-parallel CE == dense CE (fwd + grads), incl. untied + VLM
+    for a in ["gemma2_9b", "pixtral_12b"]:
+        cfg = registry.get(a, smoke=True)
+        params = T.init(jax.random.PRNGKey(0), cfg)
+        B, S = 2, 64
+        batch = {k: jnp.asarray(v) for k, v in
+                 synthetic_lm_batch(0, B, S, cfg.vocab).items()}
+        if cfg.frontend == "vit_stub":
+            batch["patch_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(1), (B, cfg.frontend_len, cfg.d_model))
+        ref = T.loss_fn(params, batch, cfg, ShardCtx(), remat=False)
+        with mesh:
+            sb = {k: jax.device_put(v, NamedSharding(
+                      mesh, P("data", "model") if v.ndim == 2
+                      else P("data", None, None)))
+                  for k, v in batch.items()}
+            got = jax.jit(lambda p, b: T.loss_fn(
+                p, b, cfg, ctx, remat=False, vocab_parallel=True))(params, sb)
+            g_ref = jax.grad(lambda p: T.loss_fn(
+                p, batch, cfg, ShardCtx(), remat=False))(params)
+            g_got = jax.jit(jax.grad(lambda p: T.loss_fn(
+                p, sb, cfg, ctx, remat=False, vocab_parallel=True)))(params)
+        np.testing.assert_allclose(float(got), float(ref), rtol=3e-5)
+        for gr, gg in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_got)):
+            np.testing.assert_allclose(np.asarray(gg), np.asarray(gr),
+                                       rtol=5e-3, atol=5e-5)
+
+    # sharded-KV decode == oracle, 2 steps
+    for a in ["gemma2_9b", "qwen2_5_14b"]:
+        cfg = registry.get(a, smoke=True)
+        params = T.init(jax.random.PRNGKey(0), cfg)
+        B = 2
+        cr = T.init_decode_state(params, cfg, B, 32, dtype=jnp.float32)
+        tok = jnp.array([[3], [5]], jnp.int32)
+        ref, cr = T.decode_step(params, cfg, tok, cr, jnp.int32(0))
+        ref2, _ = T.decode_step(params, cfg, jnp.array([[7], [9]]), cr,
+                                jnp.int32(1))
+        with mesh:
+            cs = T.init_decode_state(params, cfg, B, 32, dtype=jnp.float32)
+            cs = jax.tree.map(
+                lambda x: jax.device_put(x, NamedSharding(
+                    mesh, P(None, "data", "model", None, None)))
+                if x.ndim == 5 else x, cs)
+            f = jax.jit(lambda p, t, c, L: T.decode_step(
+                p, cfg, t, c, L, ctx))
+            got, cs = f(params, tok, cs, jnp.int32(0))
+            got2, _ = f(params, jnp.array([[7], [9]]), cs, jnp.int32(1))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(got2), np.asarray(ref2),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def check_train():
+    import shutil
+    import tempfile
+    from repro.core.spatial_conv import ConvSharding
+    from repro.models.cnn import meshnet
+    from repro.optim.optimizer import sgd
+    from repro.train.train_loop import make_train_step, TrainStepConfig, \
+        shard_tree
+    from repro.checkpoint.checkpoint import CheckpointManager
+    from repro.runtime.fault_tolerance import ResilientLoop, \
+        StragglerMonitor
+    from repro.data.pipeline import synthetic_mesh_batch
+    from repro.utils import FP32
+    mesh = make_mesh(data=2, model=2, pod=2)
+    cfg = meshnet.MeshNetConfig("tiny", input_hw=64, in_channels=4,
+                                convs_per_block=1, widths=(8, 16, 16))
+    sh = ConvSharding(batch_axes=("pod", "data"), h_axis="model")
+    params = shard_tree(meshnet.init(jax.random.PRNGKey(0), cfg), mesh,
+                        lambda x: P())
+    loss = functools.partial(meshnet.loss_fn, cfg=cfg, shardings=sh,
+                             mesh=mesh)
+    opt = sgd(0.05, momentum=0.9)
+    tstep = make_train_step(
+        lambda p, b: loss(p, b), opt, mesh,
+        TrainStepConfig(grad_accum=2, precision=FP32,
+                        pod_compression="int8_ef"))
+
+    def put(b):
+        return {"image": jax.device_put(b["image"], NamedSharding(
+                    mesh, P(("pod", "data"), "model"))),
+                "label": jax.device_put(b["label"], NamedSharding(
+                    mesh, P(("pod", "data"),)))}
+
+    ckdir = tempfile.mkdtemp()
+    try:
+        ck = CheckpointManager(ckdir, keep=2, async_save=True)
+        state = (params, opt.init(params), None)
+
+        def make_step():
+            def run(state, step):
+                p, o, ef = state
+                b = put(synthetic_mesh_batch(step, 8, 64, 4, out_hw=8))
+                p, o, ef, m = tstep(p, o, ef, b)
+                return (p, o, ef), m
+            return run
+
+        boom = {"armed": True}
+
+        def inject(step):
+            if step == 7 and boom["armed"]:
+                boom["armed"] = False
+                raise RuntimeError("synthetic node failure")
+
+        loop = ResilientLoop(ckpt=ck, make_step=make_step, ckpt_every=5,
+                             max_failures=2)
+        state, step, metrics = loop.run(state, 0, 12,
+                                        monitor=StragglerMonitor(),
+                                        inject_failure=inject)
+        assert step == 12
+        losses = []
+        p, o, ef = state
+        for s in range(12, 36):
+            b = put(synthetic_mesh_batch(s, 8, 64, 4, out_hw=8))
+            p, o, ef, m = tstep(p, o, ef, b)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0], (losses[0], losses[-1])
+        assert np.isfinite(losses).all()
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+
+def check_compress():
+    from repro.optim.grad_compress import cross_pod_mean
+    mesh = make_mesh(data=2, model=2, pod=2)
+    key = jax.random.PRNGKey(0)
+    g = {"a": jax.random.normal(key, (64, 32)),
+         "b": jax.random.normal(jax.random.PRNGKey(1), (128,))}
+    with mesh:
+        out_none, _ = jax.jit(lambda g: cross_pod_mean(
+            g, mesh=mesh, method="none"))(g)
+        out_bf16, _ = jax.jit(lambda g: cross_pod_mean(
+            g, mesh=mesh, method="bf16"))(g)
+    # replicated input => mean == input
+    np.testing.assert_allclose(np.asarray(out_none["a"]),
+                               np.asarray(g["a"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_bf16["a"]),
+                               np.asarray(g["a"]), rtol=2e-2, atol=2e-2)
+    # int8 + EF: quantization error is carried, not lost — two applications
+    # of the same gradient converge toward it on average
+    ef = None
+    with mesh:
+        f = jax.jit(lambda g, ef: cross_pod_mean(
+            g, mesh=mesh, method="int8_ef", error_feedback=ef))
+        out1, ef = f(g, ef)
+        out2, ef = f(g, ef)
+    err1 = float(jnp.abs(out1["a"] - g["a"]).mean())
+    two_step = (np.asarray(out1["a"]) + np.asarray(out2["a"])) / 2
+    err2 = float(np.abs(two_step - np.asarray(g["a"])).mean())
+    assert err2 < err1 + 1e-7, (err1, err2)
+    assert err1 < 0.05  # int8 quantization error is small
+
+
+GROUPS = {"conv": check_conv, "attention": check_attention,
+          "ssm": check_ssm, "models": check_models, "train": check_train,
+          "compress": check_compress}
+
+if __name__ == "__main__":
+    GROUPS[sys.argv[1]]()
+    print(f"dist_checks {sys.argv[1]} OK")

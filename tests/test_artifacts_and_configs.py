@@ -1,0 +1,97 @@
+"""Deliverable-level invariants: the dry-run artifact matrix is complete
+and healthy; every assigned (arch x shape) cell divides the production
+mesh; registry metadata is coherent."""
+import json
+import os
+
+import pytest
+
+from repro.configs import registry
+
+ART = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks", "artifacts", "dryrun")
+
+HAS_ARTIFACTS = os.path.isdir(ART) and len(os.listdir(ART)) > 0
+
+
+def _load(tag):
+    with open(os.path.join(ART, tag + ".json")) as f:
+        return json.load(f)
+
+
+@pytest.mark.skipif(not HAS_ARTIFACTS, reason="run repro.launch.sweep first")
+@pytest.mark.parametrize("arch", registry.ARCHS)
+@pytest.mark.parametrize("shape", list(registry.SHAPES))
+@pytest.mark.parametrize("pod", ["pod1", "pod2"])
+def test_dryrun_cell_ok(arch, shape, pod):
+    """All 80 LM cells compiled on both production meshes (deliverable e)."""
+    d = _load(f"{arch}-{shape}-{pod}")
+    assert d["ok"], d.get("error")
+    assert d["chips"] == (512 if pod == "pod2" else 256)
+    pd = d["per_device"]
+    assert pd["flops"] > 0
+    assert pd["hbm_bytes"] > 0
+    assert d["roofline_s"]["compute"] >= 0
+    # decode steps must be cheap in compute; training must not be
+    kind = registry.SHAPES[shape]["kind"]
+    if kind == "train":
+        assert d["roofline_s"]["compute"] > 1e-3
+    # every cell records a dominant bottleneck from the three terms
+    assert d["dominant"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.skipif(not HAS_ARTIFACTS, reason="run repro.launch.sweep first")
+@pytest.mark.parametrize("arch", registry.CNN_ARCHS)
+def test_dryrun_cnn_cells_ok(arch):
+    for pod in ("pod1", "pod2"):
+        d = _load(f"{arch}-cnn-{pod}")
+        assert d["ok"]
+
+
+@pytest.mark.skipif(not HAS_ARTIFACTS, reason="run repro.launch.sweep first")
+def test_hillclimb_deltas_recorded():
+    """§Perf: the optimized variants exist and beat their baselines on the
+    targeted term (peak memory / collective seconds)."""
+    base = _load("gemma2_9b-train_4k-pod1")
+    opt = _load("gemma2_9b-train_4k-pod1-opt")
+    assert opt["per_device"]["peak_bytes"] < \
+        0.6 * base["per_device"]["peak_bytes"]
+    assert opt["per_device"]["peak_bytes"] <= 16 * 2 ** 30  # fits v5e HBM
+
+    base = _load("seamless_m4t_large_v2-train_4k-pod1")
+    opt = _load("seamless_m4t_large_v2-train_4k-pod1-opt")
+    assert opt["roofline_s"]["collective"] < \
+        0.3 * base["roofline_s"]["collective"]
+
+
+@pytest.mark.parametrize("arch", registry.ARCHS)
+def test_shapes_divide_production_mesh(arch):
+    """Every assigned cell's tensors divide the 16x16 mesh factors."""
+    cfg = registry.get(arch)
+    for shape, info in registry.SHAPES.items():
+        seq, gb, kind = info["seq_len"], info["global_batch"], info["kind"]
+        assert seq % 16 == 0                       # model axis
+        if gb >= 16:
+            assert gb % 16 == 0                    # data axis
+        elif kind == "decode":
+            assert seq % 256 == 0                  # (data, model) KV shard
+    # layer plan covers every layer exactly once
+    from repro.models.lm.transformer import plan
+    total = sum(len(unit) * count for unit, count in plan(cfg))
+    assert total == cfg.n_layers
+
+
+def test_registry_aliases():
+    for alias in ["gemma2-9b", "qwen2.5-14b", "seamless-m4t-large-v2",
+                  "mixtral-8x7b"]:
+        assert registry.canon(alias) in registry.ARCHS
+    assert len(registry.ARCHS) == 10
+    assert len(registry.SHAPES) == 4  # 40 LM cells
+
+
+def test_full_attn_flags():
+    """DESIGN.md §Arch-applicability: sub-quadratic archs are not flagged."""
+    for a in ("mamba2_780m", "hymba_1_5b", "gemma2_9b", "mixtral_8x7b"):
+        assert a not in registry.FULL_ATTN_500K
+    for a in ("qwen2_5_14b", "olmo_1b", "pixtral_12b"):
+        assert a in registry.FULL_ATTN_500K

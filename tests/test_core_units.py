@@ -1,0 +1,135 @@
+"""Unit/property tests for core primitives on a single device (the
+multi-device halves live in tests/test_distributed.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.lm import modules as M
+from repro.models.lm.config import LMConfig
+from repro.utils import cdiv, human_bytes, round_up, same_pads
+
+CFG = LMConfig(name="t", family="dense", n_layers=2, d_model=32, n_heads=4,
+               n_kv_heads=2, head_dim=8, d_ff=64, vocab=97)
+
+
+# ------------------------------------------------------------------ utils --
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(1, 9), s=st.integers(1, 4))
+def test_same_pads_preserves_size(k, s):
+    """'SAME': out = in/s for any in divisible by s."""
+    lo, hi = same_pads(k, s)
+    n = 8 * s * max(k, 1)
+    out = (n + lo + hi - k) // s + 1
+    assert out == n // s
+
+
+@settings(max_examples=20, deadline=None)
+@given(a=st.integers(0, 1000), b=st.integers(1, 64))
+def test_cdiv_roundup(a, b):
+    assert cdiv(a, b) * b >= a
+    assert cdiv(a, b) * b - a < b
+    assert round_up(a, b) % b == 0
+
+
+def test_human_bytes():
+    assert human_bytes(1536) == "1.50KiB"
+    assert human_bytes(3 * 2 ** 30) == "3.00GiB"
+
+
+# ------------------------------------------------------------------- rope --
+def test_rope_preserves_norm_and_relative():
+    """Rotations preserve vector norm; scores depend on relative offset."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 16))
+    pos = jnp.arange(8)
+    y = M.rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> == <rope(q,i+d), rope(k,j+d)>
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+    def score(i, j):
+        qi = M.rope(q, jnp.array([i]), 1e4)
+        kj = M.rope(k, jnp.array([j]), 1e4)
+        return float(jnp.sum(qi * kj))
+    assert abs(score(3, 1) - score(7, 5)) < 1e-4
+
+
+# ------------------------------------------------------------------ norms --
+@pytest.mark.parametrize("kind", ["rmsnorm", "layernorm", "nonparam_ln"])
+def test_norms(kind):
+    import dataclasses
+    cfg = dataclasses.replace(CFG, norm=kind)
+    w = M.norm_init(cfg, cfg.d_model)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, cfg.d_model)) * 3
+    y = M.norm_apply(cfg, w, x)
+    assert y.shape == x.shape
+    if kind == "rmsnorm":
+        rms = np.sqrt(np.mean(np.square(np.asarray(y)), -1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-2)
+    else:
+        np.testing.assert_allclose(np.mean(np.asarray(y), -1), 0.0,
+                                   atol=1e-4)
+
+
+# -------------------------------------------------------------------- moe --
+def test_moe_top1_routes_all_tokens():
+    """With capacity_factor >= n_experts, nothing is dropped and the output
+    equals a per-token expert MLP (top-1)."""
+    import dataclasses
+    cfg = dataclasses.replace(CFG, n_experts=4, top_k=1, capacity_factor=4.0)
+    p = M.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    from repro.models.lm.modules import ShardCtx
+    y = M.moe_apply(p, x, cfg, ShardCtx())
+    # dense per-token reference
+    xt = x.reshape(-1, cfg.d_model)
+    logits = xt @ p["router"]
+    idx = jnp.argmax(logits, -1)
+    h = jnp.einsum("td,tdf->tf", xt, p["wi"][idx])
+    g = jnp.einsum("td,tdf->tf", xt, p["wg"][idx])
+    ref = jnp.einsum("tf,tfd->td", jax.nn.silu(g) * h, p["wo"][idx])
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model)),
+                               np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops():
+    """With tiny capacity, outputs are bounded (dropped tokens -> zero)."""
+    import dataclasses
+    cfg = dataclasses.replace(CFG, n_experts=2, top_k=1,
+                              capacity_factor=0.25)
+    p = M.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model))
+    from repro.models.lm.modules import ShardCtx
+    y = M.moe_apply(p, x, cfg, ShardCtx())
+    # at least some tokens must have been dropped to zero output
+    norms = np.linalg.norm(np.asarray(y)[0], axis=-1)
+    assert (norms < 1e-7).sum() >= 1
+
+
+# --------------------------------------------------------------- ssd math --
+def test_ssd_matches_sequential_recurrence():
+    """Chunked SSD == the literal h_t = a_t h_{t-1} + xdt_t B_t recurrence."""
+    from repro.models.lm.modules import _ssd_chunked
+    key = jax.random.PRNGKey(0)
+    b, l, h, p, n = 1, 12, 2, 4, 3
+    ks = jax.random.split(key, 4)
+    xdt = jax.random.normal(ks[0], (b, l, h, p)) * 0.5
+    la = -jax.random.uniform(ks[1], (b, l, h), minval=0.05, maxval=0.5)
+    B = jax.random.normal(ks[2], (b, l, n)) * 0.5
+    C = jax.random.normal(ks[3], (b, l, n)) * 0.5
+    y, hfin = _ssd_chunked(xdt, la, B, C, chunk=4)
+    a = jnp.exp(la)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(l):
+        state = state * a[:, t, :, None, None] + \
+            jnp.einsum("bhp,bn->bhpn", xdt[:, t], B[:, t])
+        ys.append(jnp.einsum("bhpn,bn->bhp", state, C[:, t]))
+    ref = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-4,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(hfin), np.asarray(state),
+                               rtol=2e-4, atol=2e-5)

@@ -1,0 +1,21 @@
+"""Distributed-correctness suite (8 host devices, subprocess-isolated).
+
+Each test drives one group in tests/dist_checks.py:
+  conv       spatial conv/pool/BN == single-device oracle (fwd + grads,
+             1-D and 2-D decomposition, overlap on/off)   [paper §III-A]
+  attention  ring / windowed-halo / decode attention == oracle
+  ssm        distributed prefix state == sequential scan
+  models     per-family sequence-parallel loss+decode == oracle
+  train      resilient E2E training (fault injection, int8 EF compression,
+             grad accumulation, hybrid parallelism)
+  compress   cross-pod gradient compression semantics
+"""
+import pytest
+
+from conftest import run_dist_group
+
+
+@pytest.mark.parametrize("group", ["conv", "attention", "ssm", "models",
+                                   "train", "compress"])
+def test_distributed(group):
+    run_dist_group(group)

@@ -1,0 +1,127 @@
+"""Pallas kernel correctness: interpret-mode execution vs pure-jnp oracles,
+swept over shapes and dtypes (+ hypothesis-generated cases)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.conv2d import conv2d
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd import ssd_chunk
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------- conv2d --
+@pytest.mark.parametrize("h,w,c,f,k,s", [
+    (18, 16, 8, 16, 3, 1), (33, 16, 4, 8, 3, 2), (16, 12, 3, 5, 1, 1),
+    (23, 9, 6, 128, 7, 2), (12, 8, 16, 256, 3, 1), (9, 9, 2, 3, 5, 1),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv2d_sweep(h, w, c, f, k, s, dtype):
+    x = jax.random.normal(KEY, (2, h, w, c), dtype)
+    wt = (jax.random.normal(jax.random.PRNGKey(1), (k, k, c, f), dtype)
+          * 0.1).astype(dtype)
+    got = conv2d(x, wt, stride=s, interpret=True)
+    want = ref.conv2d_ref(x, wt, stride=s)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(h=st.integers(5, 24), w=st.integers(5, 16), c=st.integers(1, 8),
+       f=st.integers(1, 16), k=st.sampled_from([1, 3, 5]),
+       s=st.sampled_from([1, 2]))
+def test_conv2d_property(h, w, c, f, k, s):
+    if h < k or w < k:
+        return
+    x = jax.random.normal(KEY, (1, h, w, c), jnp.float32)
+    wt = jax.random.normal(jax.random.PRNGKey(1), (k, k, c, f)) * 0.1
+    got = conv2d(x, wt, stride=s, interpret=True)
+    want = ref.conv2d_ref(x, wt, stride=s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ------------------------------------------------------- flash attention --
+@pytest.mark.parametrize("sq,hq,hkv,d,causal,window,cap", [
+    (64, 4, 2, 32, True, None, None), (128, 8, 8, 16, True, 37, None),
+    (64, 4, 1, 64, False, None, None), (96, 6, 3, 32, True, None, 30.0),
+    (32, 2, 2, 8, True, 5, 20.0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_sweep(sq, hq, hkv, d, causal, window, cap, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, sq, hq, d), dtype)
+    k = jax.random.normal(ks[1], (2, sq, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (2, sq, hkv, d), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=cap, block_q=32, block_k=32,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.sampled_from([16, 32, 48]), g=st.sampled_from([1, 2, 4]),
+       hkv=st.integers(1, 3), d=st.sampled_from([8, 16]),
+       causal=st.booleans(),
+       window=st.one_of(st.none(), st.integers(1, 20)))
+def test_flash_property(sq, g, hkv, d, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, sq, hkv * g, d), jnp.float32)
+    k = jax.random.normal(ks[1], (1, sq, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (1, sq, hkv, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=16, block_k=16, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+    # rows of softmax sum to 1 -> output within [min(v), max(v)] hull
+    assert np.isfinite(np.asarray(got)).all()
+
+
+# ------------------------------------------------------------------- ssd --
+@pytest.mark.parametrize("b,l,h,p,n,chunk", [
+    (2, 64, 4, 16, 8, 16), (1, 32, 8, 8, 16, 32), (2, 48, 2, 32, 4, 8),
+])
+def test_ssd_sweep(b, l, h, p, n, chunk):
+    ks = jax.random.split(KEY, 4)
+    xdt = jax.random.normal(ks[0], (b, l, h, p)) * 0.5
+    la = -jax.random.uniform(ks[1], (b, l, h), minval=0.01, maxval=0.5)
+    B = jax.random.normal(ks[2], (b, l, n)) * 0.5
+    C = jax.random.normal(ks[3], (b, l, n)) * 0.5
+    y, s = ssd_chunk(xdt, la, B, C, chunk=chunk, interpret=True)
+    for i in range(l // chunk):
+        sl = slice(i * chunk, (i + 1) * chunk)
+        yr, sr = ref.ssd_chunk_ref(xdt[:, sl], la[:, sl], B[:, sl],
+                                   C[:, sl])
+        np.testing.assert_allclose(np.asarray(y[:, sl]), np.asarray(yr),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(s[:, i]), np.asarray(sr),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(l=st.sampled_from([16, 32]), h=st.integers(1, 4),
+       p=st.sampled_from([4, 8]), n=st.sampled_from([4, 8]))
+def test_ssd_property(l, h, p, n):
+    ks = jax.random.split(KEY, 4)
+    xdt = jax.random.normal(ks[0], (1, l, h, p)) * 0.5
+    la = -jax.random.uniform(ks[1], (1, l, h), minval=0.01, maxval=1.0)
+    B = jax.random.normal(ks[2], (1, l, n)) * 0.5
+    C = jax.random.normal(ks[3], (1, l, n)) * 0.5
+    y, s = ssd_chunk(xdt, la, B, C, chunk=l, interpret=True)
+    yr, sr = ref.ssd_chunk_ref(xdt, la, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s[:, 0]), np.asarray(sr),
+                               rtol=2e-5, atol=2e-5)

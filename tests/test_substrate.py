@@ -1,0 +1,192 @@
+"""Substrate tests: optimizers, checkpointing, data pipeline, CNN models."""
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.core.spatial_conv import ConvSharding
+from repro.data.pipeline import (Prefetcher, synthetic_lm_batch,
+                                 synthetic_mesh_batch)
+from repro.models.cnn import meshnet, resnet
+from repro.optim.optimizer import adamw, clip_by_global_norm, sgd, \
+    warmup_cosine
+from repro.runtime.fault_tolerance import StragglerMonitor
+
+
+# ------------------------------------------------------------- optimizers --
+def test_sgd_quadratic():
+    opt = sgd(0.05, momentum=0.9)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"x": 2 * params["x"]}
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_adamw_quadratic():
+    opt = adamw(0.1, weight_decay=0.0)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"x": 2 * params["x"]}
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert abs(float(total) - 1.0) < 1e-4
+
+
+def test_warmup_cosine():
+    lr = warmup_cosine(1.0, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(lr(jnp.int32(100))) < 0.11
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_sgd_descends(seed):
+    """One SGD step on a convex quadratic never increases the loss."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0.5, 2.0, size=(5,)))
+    x0 = jnp.asarray(rng.normal(size=(5,)))
+    loss = lambda x: jnp.sum(a * x ** 2)
+    opt = sgd(0.01, momentum=0.0)
+    st_ = opt.init({"x": x0})
+    g = jax.grad(lambda p: loss(p["x"]))({"x": x0})
+    new, _ = opt.update(g, st_, {"x": x0})
+    assert float(loss(new["x"])) <= float(loss(x0)) + 1e-9
+
+
+# ------------------------------------------------------------ checkpoints --
+def test_checkpoint_roundtrip_and_rotation():
+    d = tempfile.mkdtemp()
+    try:
+        ck = CheckpointManager(d, keep=2, async_save=False)
+        tree = {"w": jnp.arange(12.0).reshape(3, 4),
+                "b": {"c": jnp.ones((2,), jnp.int32)}}
+        for s in (5, 10, 15):
+            ck.save(s, jax.tree.map(lambda x: x + s, tree))
+        assert ck.latest_step() == 15
+        got, manifest = ck.restore(tree)
+        np.testing.assert_allclose(np.asarray(got["w"]),
+                                   np.asarray(tree["w"]) + 15)
+        assert manifest["step"] == 15
+        # rotation kept only 2
+        steps = [f for f in os.listdir(d) if f.startswith("step-")]
+        assert len(steps) == 2
+    finally:
+        shutil.rmtree(d)
+
+
+def test_checkpoint_async_and_atomic():
+    d = tempfile.mkdtemp()
+    try:
+        ck = CheckpointManager(d, keep=3, async_save=True)
+        tree = {"w": jnp.zeros((256, 256))}
+        ck.save(1, tree)
+        ck.wait()
+        assert ck.latest_step() == 1
+        # no tmp- dirs left behind after commit
+        assert not [f for f in os.listdir(d) if f.startswith("tmp-")]
+    finally:
+        shutil.rmtree(d)
+
+
+def test_checkpoint_structure_mismatch_raises():
+    d = tempfile.mkdtemp()
+    try:
+        ck = CheckpointManager(d, async_save=False)
+        ck.save(1, {"w": jnp.zeros((3,))})
+        with pytest.raises(AssertionError):
+            ck.restore({"w": jnp.zeros((4,))})
+    finally:
+        shutil.rmtree(d)
+
+
+# ------------------------------------------------------------------- data --
+def test_data_determinism():
+    a = synthetic_lm_batch(7, 4, 16, 100)
+    b = synthetic_lm_batch(7, 4, 16, 100)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = synthetic_mesh_batch(3, 2, 64, 4, out_hw=8)
+    d = synthetic_mesh_batch(3, 2, 64, 4, out_hw=8)
+    np.testing.assert_array_equal(c["image"], d["image"])
+    assert c["image"].shape == (2, 64, 64, 4)
+
+
+def test_prefetcher():
+    pf = Prefetcher(lambda s: {"step": np.array([s])}, start_step=3)
+    try:
+        got = [next(pf)["step"][0] for _ in range(4)]
+        assert got == [3, 4, 5, 6]
+    finally:
+        pf.close()
+
+
+# -------------------------------------------------------------- straggler --
+def test_straggler_monitor():
+    mon = StragglerMonitor(k=5.0, warmup=3)
+    for i in range(10):
+        assert not mon.record(i, 0.1 + 0.001 * (i % 2))
+    assert mon.record(10, 1.5)       # 15x median -> flagged
+    assert mon.stats["flagged"] == 1
+
+
+# ------------------------------------------------------------- CNN models --
+def test_meshnet_shapes_and_loss():
+    cfg = meshnet.MeshNetConfig("t", input_hw=64, in_channels=4,
+                                convs_per_block=1, widths=(8, 16, 16))
+    p = meshnet.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64, 4))
+    y = meshnet.apply(p, x, cfg, ConvSharding())
+    assert y.shape == (2, 8, 8, 1)
+    lbl = (jax.random.uniform(jax.random.PRNGKey(2), y.shape) > .5) \
+        .astype(jnp.float32)
+    l = meshnet.loss_fn(p, {"image": x, "label": lbl}, cfg, ConvSharding())
+    assert np.isfinite(float(l))
+
+
+def test_resnet_shapes_and_loss():
+    cfg = resnet.ResNetConfig(input_hw=32, n_classes=10, stages=(1, 1, 1, 1),
+                              widths=(4, 8, 8, 8))
+    p = resnet.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    out = resnet.apply(p, x, cfg)
+    assert out.shape == (2, 10)
+    l = resnet.loss_fn(p, {"image": x, "label": jnp.array([1, 2])}, cfg)
+    assert np.isfinite(float(l))
+
+
+def test_cnn_training_decreases_loss():
+    cfg = meshnet.MeshNetConfig("t", input_hw=32, in_channels=2,
+                                convs_per_block=1, widths=(4, 8))
+    p = meshnet.init(jax.random.PRNGKey(0), cfg)
+    opt = sgd(0.05, momentum=0.9)
+    s = opt.init(p)
+    step = jax.jit(lambda p, s, b: _one(p, s, b))
+
+    def _one(p, s, b):
+        l, g = jax.value_and_grad(meshnet.loss_fn)(p, b, cfg, ConvSharding())
+        p, s = opt.update(g, s, p)
+        return p, s, l
+    losses = []
+    for i in range(25):
+        b = synthetic_mesh_batch(i, 4, 32, 2, out_hw=8)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        p, s, l = step(p, s, b)
+        losses.append(float(l))
+    assert losses[-1] < losses[0]
