@@ -1,0 +1,122 @@
+"""Uniform vs solved per-layer plans: measured step time cross-checked
+against the §V perf model — the validation loop the paper closes with
+(predicted vs measured, Table I-III).
+
+  PYTHONPATH=src python -m benchmarks.strategy_exec [ndevices]
+
+Runs on `ndevices` host CPU devices (default 4, set before jax import).
+For each CNN workload it times a jitted loss+grad step under
+
+  * the legacy uniform hybrid plan (one ConvSharding everywhere), and
+  * the §V-C solved auto plan (per-layer dists + reshard points),
+
+and prints `name,us_per_call,derived` CSV rows carrying the perf-model
+prediction from a host-calibrated Machine.  The absolute model/measured
+ratio calibrates the Machine constants; the *relative* ordering
+(auto <= uniform) is the optimizer's promise.
+"""
+import os
+import sys
+
+if __name__ == "__main__":
+    _n = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={_n}")
+
+import dataclasses  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+
+def _time_step(fn, *args, reps: int = 5) -> float:
+    fn(*args)[0].block_until_ready()          # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def _host_machine():
+    """Calibrate a perf-model Machine to this host: measure achieved conv
+    flops once, use loopback-ish comm constants (shared memory)."""
+    from repro.core.perfmodel import Machine
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64, 64, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 32, 64)) * 0.1
+    f = jax.jit(lambda x, w: jax.lax.conv_general_dilated(
+        x, w, (1, 1), ((1, 1), (1, 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC")))
+    f(x, w).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        y = f(x, w)
+    y.block_until_ready()
+    dt = (time.perf_counter() - t0) / 10
+    flops = 2.0 * 4 * 32 * 64 * 64 * 9 * 64
+    return Machine("host-cpu", peak_flops=flops / dt, mem_bw=20e9,
+                   alpha=5e-6, beta=1 / 10.0e9,
+                   alpha_coll=8e-6, beta_coll=1 / 10.0e9, wordsize=4,
+                   compute_efficiency=1.0)
+
+
+def run() -> None:
+    from repro.core import plan as plan_lib
+    from repro.core.spatial_conv import ConvSharding
+    from repro.data.pipeline import synthetic_mesh_batch
+    from repro.launch.mesh import make_mesh
+    from repro.models.cnn import meshnet
+
+    ndev = jax.device_count()
+    data = max(1, ndev // 2)
+    model = max(1, ndev // data)
+    mesh = make_mesh(data=data, model=model)
+    machine = _host_machine()
+
+    # a meshnet whose geometry makes the strategy choice non-trivial on
+    # this mesh (batch 2 < device count: pure sample parallelism invalid)
+    cfg = meshnet.MeshNetConfig("bench", input_hw=128, in_channels=8,
+                                convs_per_block=2, widths=(16, 32, 32),
+                                bn_scope="global")
+    batch = 2
+    specs = meshnet.layer_specs(cfg, batch)
+    params = meshnet.init(jax.random.PRNGKey(0), cfg)
+    b = {k: jnp.asarray(v) for k, v in synthetic_mesh_batch(
+        0, batch, cfg.input_hw, cfg.in_channels,
+        out_hw=cfg.out_hw).items()}
+
+    uni_sh = ConvSharding(batch_axes=("data",), h_axis="model")
+    names = meshnet.layer_names(cfg)
+    uniform = plan_lib.NetworkPlan.uniform(uni_sh, names)
+    # cost the uniform plan through the same §V-B model for comparability
+    uniform = dataclasses.replace(
+        uniform, predicted=plan_lib.compile_plan(
+            {n: plan_lib._sharding_to_dist(uni_sh) for n in names},
+            specs, mesh, machine=machine).predicted)
+    auto = plan_lib.plan_line(machine, specs, mesh)
+
+    for tag, plan in (("uniform", uniform), ("auto", auto)):
+        def put(v):
+            first = specs[0]
+            spec = plan.input_spec(first.name, first.h, first.w,
+                                   first.k, first.s, mesh)
+            return jax.device_put(v, NamedSharding(mesh, spec))
+
+        bb = {"image": put(b["image"]),
+              "label": jax.device_put(b["label"],
+                                      NamedSharding(mesh, P("data")))}
+        with mesh:
+            step = jax.jit(jax.value_and_grad(
+                lambda p, x: meshnet.loss_fn(p, x, cfg, plan, mesh)))
+            dt = _time_step(lambda p, x: step(p, x), params, bb)
+        pred = plan.predicted["total"] if plan.predicted else float("nan")
+        print(f"strategy_exec/mesh128/{tag},{dt*1e6:.1f},"
+              f"predicted_us={pred*1e6:.1f} "
+              f"model_measured_ratio={pred/dt:.3f} "
+              f"reshards={plan.n_reshards}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,9 +1,12 @@
-"""Quickstart: the paper's pipeline in one minute on one CPU device.
+"""Quickstart: the paper's pipeline — solve, compile, execute — in one
+minute on CPU devices.
 
 1. Build the (reduced) mesh-tangling model.
-2. Ask the strategy optimizer (paper §V-C) how to parallelize it on a
-   hypothetical 2x2 mesh.
-3. Train a few steps with the resilient loop; checkpoint and resume.
+2. Run the strategy optimizer (paper §V-C) on its layer line for this
+   mesh, and ALSO show what it would pick on a hypothetical 2x2 mesh.
+3. Compile the solved strategy into an executable NetworkPlan (per-layer
+   ConvShardings + §III-C reshard points, core.plan) and train a few steps
+   WITH that plan; checkpoint and resume.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,9 +17,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.checkpoint import CheckpointManager
-from repro.core import perfmodel as pm, strategy as strat
-from repro.core.spatial_conv import ConvSharding
+from repro.core import perfmodel as pm
+from repro.core import plan as plan_lib
 from repro.data.pipeline import synthetic_mesh_batch
+from repro.launch.mesh import make_mesh
 from repro.models.cnn import meshnet
 from repro.optim.optimizer import sgd
 from repro.utils import human_count, tree_num_params
@@ -26,20 +30,22 @@ cfg = meshnet.MeshNetConfig("quickstart", input_hw=64, in_channels=4,
 params = meshnet.init(jax.random.PRNGKey(0), cfg)
 print(f"model: {cfg.name}, {human_count(tree_num_params(params))} params")
 
-# --- what would the paper's strategy optimizer do on a 2x2 mesh? ---------
 machine = pm.TPU_V5E
-layers = meshnet.layer_specs(cfg, n=8)
-mesh_shape = {"data": 2, "model": 2}
-cands = [strat.candidate_dists(l, mesh_shape) for l in layers]
-res = strat.solve_line(machine, layers, cands, mesh_shape)
-print("\nper-layer parallel execution strategy (paper §V-C):")
-for l, d in zip(layers, res.dists):
-    print(f"  {l.name:12s} {l.h:4d}x{l.w:<4d} -> {dict(d.dims)}")
-print(f"predicted mini-batch time: {res.cost*1e3:.2f} ms")
+BATCH = 4
+layers = meshnet.layer_specs(cfg, n=BATCH)
 
-# --- train a few steps, checkpoint, resume -------------------------------
-loss_fn = functools.partial(meshnet.loss_fn, cfg=cfg,
-                            shardings=ConvSharding())
+# --- what would the optimizer do on a (hypothetical) 2x2 mesh? -----------
+hypo = plan_lib.plan_line(machine, layers, {"data": 2, "model": 2})
+print("\nsolved plan for a hypothetical 2x2 mesh (paper §V-C):")
+print(hypo.describe())
+
+# --- solve + compile for THIS machine's devices, then execute it ---------
+mesh = make_mesh(data=1, model=jax.device_count())
+plan = plan_lib.plan_line(machine, layers, mesh)
+print(f"\nexecuting on mesh {dict(mesh.shape)}:")
+print(plan.describe())
+
+loss_fn = functools.partial(meshnet.loss_fn, cfg=cfg, plan=plan, mesh=mesh)
 opt = sgd(0.05, momentum=0.9)
 state = opt.init(params)
 
@@ -53,10 +59,10 @@ def step(p, s, batch):
 
 ckdir = tempfile.mkdtemp()
 ck = CheckpointManager(ckdir, async_save=False)
-print("\ntraining:")
+print("\ntraining under the compiled plan:")
 for i in range(10):
     b = {k: jnp.asarray(v) for k, v in
-         synthetic_mesh_batch(i, 4, 64, 4, out_hw=8).items()}
+         synthetic_mesh_batch(i, BATCH, 64, 4, out_hw=8).items()}
     params, state, l = step(params, state, b)
     if i % 3 == 0:
         print(f"  step {i}: loss {float(l):.4f}")

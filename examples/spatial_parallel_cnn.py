@@ -38,7 +38,7 @@ cfg = meshnet.MeshNetConfig("spatial-demo", input_hw=64, in_channels=4,
 sharding = ConvSharding(batch_axes=("pod", "data"), h_axis="model")
 params = shard_tree(meshnet.init(jax.random.PRNGKey(0), cfg), mesh,
                     lambda x: P())
-loss = functools.partial(meshnet.loss_fn, cfg=cfg, shardings=sharding,
+loss = functools.partial(meshnet.loss_fn, cfg=cfg, plan=sharding,
                          mesh=mesh)
 opt = sgd(0.05, momentum=0.9)
 step_fn = make_train_step(

@@ -41,7 +41,7 @@ params = meshnet.init(jax.random.PRNGKey(0), cfg)
 print(f"{cfg.name}: {human_count(tree_num_params(params))} params "
       f"(paper's 1K-model family), input {hw}^2 x 18")
 
-loss = functools.partial(meshnet.loss_fn, cfg=cfg, shardings=ConvSharding())
+loss = functools.partial(meshnet.loss_fn, cfg=cfg, plan=ConvSharding())
 opt = sgd(warmup_cosine(0.02, 20, args.steps), momentum=0.9)
 
 

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.utils import shard_map
+
 NEG_INF = -1e30
 
 
@@ -94,7 +96,7 @@ def decode_attention(q, k_cache, v_cache, length, *, mesh,
     bspec = tuple(batch_axes) or None
     qspec = P(bspec, None, None, None)
     kvspec = P(bspec, axes, None, None)
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh, in_specs=(qspec, kvspec, kvspec, P()),
         out_specs=qspec)(q, k_cache, v_cache, length)
 
@@ -127,6 +129,6 @@ def cache_append(k_cache, v_cache, k_new, v_new, length, *, mesh,
     bspec = tuple(batch_axes) or None
     kvspec = P(bspec, axes, None, None)
     nspec = P(bspec, None, None, None)
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh, in_specs=(kvspec, kvspec, nspec, nspec, P()),
         out_specs=(kvspec, kvspec))(k_cache, v_cache, k_new, v_new, length)

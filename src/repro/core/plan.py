@@ -1,0 +1,355 @@
+"""Strategy-to-execution plan compiler (paper §V-C output -> runtime).
+
+`strategy.solve_dag` / `solve_line` answer the paper's optimization problem
+with a `{layer name: Dist}` map — a *mathematical* object.  This module
+lowers that map into a `NetworkPlan` the models execute:
+
+  * each layer's `Dist` becomes the runtime `ConvSharding` that drives the
+    halo-exchange conv/pool/BN implementations (core.spatial_conv);
+  * a distribution change between consecutive layers becomes an explicit
+    reshard point — the paper's Shuffle(D_i, D_j) (§III-C) — lowered to
+    ``lax.with_sharding_constraint`` so GSPMD materializes the all-to-all
+    exactly where the optimizer paid for it;
+  * every layer is validated against its geometry (the `ConvSharding.fit`
+    edge cases, §III-A): a distribution the runtime would demote (spatial
+    shard smaller than the kernel, non-divisible extents) is demoted at
+    *compile* time and recorded, so the perf-model prediction stays honest;
+  * mesh axes of size 1 are dropped (they provide no parallelism), which
+    makes a plan solved on a 1x1 mesh execute the exact single-device code
+    path — the oracle-equivalence contract the tests pin down;
+  * the compiled plan carries a predicted cost report (core.perfmodel) so
+    measured step time can be cross-checked against the model
+    (benchmarks/strategy_exec.py).
+
+A `NetworkPlan` built with `NetworkPlan.uniform(conv_sharding)` reproduces
+the legacy one-`ConvSharding`-for-every-layer behavior bit for bit, which is
+how existing callers keep working.
+"""
+from __future__ import annotations
+
+import dataclasses
+import types
+from typing import Mapping, Sequence
+
+import jax
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.distribution import Dist
+from repro.core.perfmodel import (ConvLayer, EmpiricalTable, Machine,
+                                  network_cost)
+from repro.core.spatial_conv import ConvSharding
+from repro.core.strategy import candidate_dists, solve_dag, solve_line
+
+
+class PlanError(ValueError):
+    """A distribution map cannot be lowered to an executable plan."""
+
+
+# ---------------------------------------------------------------------------
+# Dist -> ConvSharding lowering
+# ---------------------------------------------------------------------------
+
+def normalize_dist(d: Dist, mesh_shape: Mapping[str, int]) -> Dist:
+    """Drop mesh axes of size 1 — they contribute no parallelism, and
+    dropping them lets size-1 meshes take the dense single-device path."""
+    dims = {k: tuple(a for a in axes if mesh_shape.get(a, 1) > 1)
+            for k, axes in d.dims.items()}
+    dims = {k: v for k, v in dims.items() if v}
+    return Dist(d.name, dims)
+
+
+def dist_to_sharding(d: Dist, mesh_shape: Mapping[str, int]) -> ConvSharding:
+    """Lower a Dist to the runtime ConvSharding, or raise PlanError.
+
+    The runtime executes sample (N) and spatial (H and/or W, one mesh axis
+    each) parallelism; channel/filter distributions (§III-D) are perf-model
+    candidates only until a runtime lowering exists.
+    """
+    d = normalize_dist(d, mesh_shape)
+    for dim in ("C", "F"):
+        if d.axes(dim):
+            raise PlanError(
+                f"dist {d.name!r} shards {dim} — channel/filter parallelism "
+                "has no runtime lowering yet (perf-model only)")
+    for dim in ("H", "W"):
+        if len(d.axes(dim)) > 1:
+            raise PlanError(
+                f"dist {d.name!r} shards {dim} over {d.axes(dim)} — the "
+                "runtime supports one mesh axis per spatial dim")
+    unknown = set(d.dims) - {"N", "H", "W"}
+    if unknown:
+        raise PlanError(f"dist {d.name!r} shards non-CNN dims {unknown}")
+    h, w = d.axes("H"), d.axes("W")
+    return ConvSharding(batch_axes=d.axes("N"),
+                        h_axis=h[0] if h else None,
+                        w_axis=w[0] if w else None)
+
+
+def is_executable(d: Dist, mesh_shape: Mapping[str, int]) -> bool:
+    try:
+        dist_to_sharding(d, mesh_shape)
+        return True
+    except PlanError:
+        return False
+
+
+def executable_candidates(layer: ConvLayer, mesh_shape: Mapping[str, int],
+                          allow_w_split: bool = True) -> list[Dist]:
+    """The §V-C candidate set restricted to runtime-executable dists.
+
+    Never empty: a fully replicated layer is always executable (the solver
+    then pays pure redundancy for it, which correctly prices it out whenever
+    any parallel candidate exists).
+    """
+    out = [d for d in candidate_dists(layer, mesh_shape,
+                                      allow_w_split=allow_w_split)
+           if is_executable(d, mesh_shape)]
+    return out or [Dist("replicated", {})]
+
+
+def _sharding_to_dist(sh: ConvSharding, name: str = "uniform") -> Dist:
+    dims: dict[str, tuple[str, ...]] = {}
+    if sh.batch_axes:
+        dims["N"] = tuple(sh.batch_axes)
+    if sh.h_axis:
+        dims["H"] = (sh.h_axis,)
+    if sh.w_axis:
+        dims["W"] = (sh.w_axis,)
+    return Dist(name, dims)
+
+
+# ---------------------------------------------------------------------------
+# the plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    name: str
+    sharding: ConvSharding
+    dist: Dist | None = None      # the solved Dist (None for legacy lists)
+    reshard_in: bool = False      # §III-C shuffle on this layer's input
+    note: str = ""                # e.g. geometry demotion record
+
+
+@dataclasses.dataclass
+class NetworkPlan:
+    """Executable per-layer distribution plan.
+
+    `layers` is keyed by layer name in execution order; `default` (if set)
+    answers for layer names not in the map — that is the uniform-plan
+    backward-compatibility path.  `predicted` is the perf-model cost report
+    from compile time (core.perfmodel.network_cost dict), if a machine was
+    supplied.
+    """
+    layers: dict[str, LayerPlan] = dataclasses.field(default_factory=dict)
+    default: ConvSharding | None = None
+    predicted: dict | None = None
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def uniform(cls, sharding: ConvSharding,
+                names: Sequence[str] = ()) -> "NetworkPlan":
+        """The legacy single-ConvSharding configuration as a plan: every
+        layer gets `sharding`, no reshard points."""
+        d = _sharding_to_dist(sharding)
+        return cls(layers={n: LayerPlan(n, sharding, d) for n in names},
+                   default=sharding)
+
+    @classmethod
+    def from_shardings(cls, names: Sequence[str],
+                       shardings: Sequence[ConvSharding]) -> "NetworkPlan":
+        """Legacy per-layer ConvSharding list (meshnet.apply's old API)."""
+        assert len(names) == len(shardings), (len(names), len(shardings))
+        return cls(layers={n: LayerPlan(n, s)
+                           for n, s in zip(names, shardings)})
+
+    @classmethod
+    def of(cls, obj) -> "NetworkPlan":
+        """Normalize NetworkPlan | ConvSharding | None into a plan."""
+        if isinstance(obj, NetworkPlan):
+            return obj
+        if obj is None:
+            return cls.uniform(ConvSharding())
+        if isinstance(obj, ConvSharding):
+            return cls.uniform(obj)
+        raise TypeError(f"cannot build a NetworkPlan from {type(obj)}")
+
+    # -- queries ------------------------------------------------------------
+    def sharding(self, name: str) -> ConvSharding:
+        lp = self.layers.get(name)
+        if lp is not None:
+            return lp.sharding
+        if self.default is not None:
+            return self.default
+        raise PlanError(f"plan has no entry for layer {name!r} "
+                        f"(knows {list(self.layers)[:8]}...)")
+
+    @property
+    def n_reshards(self) -> int:
+        return sum(lp.reshard_in for lp in self.layers.values())
+
+    def input_spec(self, name: str, h: int, w: int, k: int, s: int,
+                   mesh=None) -> P:
+        """Placement spec for the NHWC tensor feeding layer `name`, with the
+        geometry fit applied (so hosts can device_put the batch directly)."""
+        return self.sharding(name).fit(h, w, k, s, mesh).x_spec()
+
+    # -- execution ----------------------------------------------------------
+    def reshard(self, x, name: str, mesh=None):
+        """Apply the §III-C shuffle entering layer `name`: a sharding
+        constraint at the distribution change, which GSPMD lowers to the
+        redistribution collective the perf model charged as Shuffle."""
+        lp = self.layers.get(name)
+        if lp is None or not lp.reshard_in or mesh is None:
+            return x
+        return lax.with_sharding_constraint(
+            x, NamedSharding(mesh, lp.sharding.x_spec()))
+
+    # -- reporting ----------------------------------------------------------
+    def describe(self) -> str:
+        rows = []
+        for lp in self.layers.values():
+            tag = "shuffle <- " if lp.reshard_in else ""
+            sh = lp.sharding
+            parts = []
+            if sh.batch_axes:
+                parts.append(f"N:{','.join(sh.batch_axes)}")
+            if sh.h_axis:
+                parts.append(f"H:{sh.h_axis}")
+            if sh.w_axis:
+                parts.append(f"W:{sh.w_axis}")
+            lay = " ".join(parts) or "replicated"
+            note = f"   [{lp.note}]" if lp.note else ""
+            rows.append(f"  {lp.name:20s} {tag}{lay}{note}")
+        head = [f"NetworkPlan: {len(self.layers)} layers, "
+                f"{self.n_reshards} reshard points"]
+        if self.predicted is not None:
+            head.append(
+                f"  predicted step: {self.predicted['total']*1e3:.3f} ms "
+                f"(fp {self.predicted['fp']*1e3:.3f} + "
+                f"shuffle {self.predicted['shuffle']*1e3:.3f} + "
+                f"bp {self.predicted['bp']*1e3:.3f})")
+        return "\n".join(head + rows)
+
+
+# ---------------------------------------------------------------------------
+# compilation
+# ---------------------------------------------------------------------------
+
+def _mesh_shape(mesh) -> dict[str, int]:
+    if mesh is None:
+        return {}
+    if isinstance(mesh, Mapping):
+        return dict(mesh)
+    return dict(mesh.shape)
+
+
+def _geom_mesh(mesh_shape: Mapping[str, int]):
+    """ConvSharding.fit only reads dict(mesh.shape)."""
+    return types.SimpleNamespace(shape=dict(mesh_shape)) if mesh_shape \
+        else None
+
+
+def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
+                 specs: Sequence[ConvLayer], mesh=None, *,
+                 graph=None, machine: Machine | None = None,
+                 table: EmpiricalTable | None = None,
+                 overlap: bool = True,
+                 cost_specs: Sequence[ConvLayer] | None = None
+                 ) -> NetworkPlan:
+    """Lower a solved distribution map into an executable NetworkPlan.
+
+    dists:   {layer name: Dist} (solve_dag) or a Dist per spec (solve_line).
+    specs:   ConvLayers in execution order (the geometry to validate against).
+    graph:   optional nx.DiGraph: reshard points are detected against actual
+             predecessors instead of list order (branchy networks).
+    machine: if given, attach the §V-B cost report under the *compiled*
+             (post-demotion) distributions, evaluated over `cost_specs`
+             (default: `specs`) — branchy networks pass their main path so
+             side branches are not costed as line continuations.
+    """
+    mesh_shape = _mesh_shape(mesh)
+    gm = _geom_mesh(mesh_shape)
+    if not isinstance(dists, Mapping):
+        assert len(dists) == len(specs), (len(dists), len(specs))
+        dists = {l.name: d for l, d in zip(specs, dists)}
+
+    compiled: dict[str, LayerPlan] = {}
+    final: dict[str, Dist] = {}
+    for i, spec in enumerate(specs):
+        if spec.name not in dists:
+            raise PlanError(f"no solved dist for layer {spec.name!r}")
+        d = normalize_dist(dists[spec.name], mesh_shape)
+        sh = dist_to_sharding(d, mesh_shape)
+        n_ways = d.ways("N", mesh_shape)
+        if spec.n % n_ways:
+            raise PlanError(f"{spec.name}: N={spec.n} not divisible by "
+                            f"{n_ways}-way {d.name!r}")
+        note = ""
+        fitted = sh.fit(spec.h, spec.w, spec.k, spec.s, gm) if gm else sh
+        if fitted != sh:
+            # the ConvSharding.fit edge case (§III-A): record the demotion
+            # so the executed plan and the costed plan stay identical.
+            dropped = [ax for ax in ("h_axis", "w_axis")
+                       if getattr(sh, ax) and not getattr(fitted, ax)]
+            note = (f"demoted {'/'.join(dropped)}: "
+                    f"{spec.h}x{spec.w} shard vs k={spec.k},s={spec.s}")
+            sh = fitted
+            d = _sharding_to_dist(sh, d.name + "-demoted")
+        if graph is not None:
+            preds = [final[p] for p in graph.predecessors(spec.name)
+                     if p in final]
+            reshard = any(not p.same_as(d) for p in preds)
+        else:
+            prev = final.get(specs[i - 1].name) if i else None
+            reshard = prev is not None and not prev.same_as(d)
+        compiled[spec.name] = LayerPlan(spec.name, sh, d,
+                                        reshard_in=reshard, note=note)
+        final[spec.name] = d
+
+    predicted = None
+    if machine is not None and mesh_shape:
+        cs = list(cost_specs if cost_specs is not None else specs)
+        predicted = network_cost(machine, cs, [final[l.name] for l in cs],
+                                 mesh_shape, table, overlap)
+    return NetworkPlan(layers=compiled, predicted=predicted)
+
+
+# ---------------------------------------------------------------------------
+# solve + compile in one step
+# ---------------------------------------------------------------------------
+
+def plan_line(machine: Machine, specs: Sequence[ConvLayer], mesh, *,
+              table: EmpiricalTable | None = None, overlap: bool = True,
+              allow_w_split: bool = True) -> NetworkPlan:
+    """Line networks (meshnet): §V-C shortest path over executable
+    candidates, compiled to a NetworkPlan."""
+    mesh_shape = _mesh_shape(mesh)
+    cands = [executable_candidates(l, mesh_shape, allow_w_split)
+             for l in specs]
+    res = solve_line(machine, specs, cands, mesh_shape, table, overlap)
+    return compile_plan(res.dists, specs, mesh, machine=machine,
+                        table=table, overlap=overlap)
+
+
+def plan_graph(machine: Machine, graph, specs: Sequence[ConvLayer], mesh, *,
+               table: EmpiricalTable | None = None,
+               overlap: bool = True,
+               allow_w_split: bool = True) -> NetworkPlan:
+    """Branchy networks (ResNet): §V-C longest-path-first over the DAG.
+
+    `specs` fixes the execution/validation order and may be a subset of the
+    graph (e.g. the main path); side-branch nodes present in the graph but
+    not in `specs` are compiled too, ordered after their predecessors.
+    """
+    mesh_shape = _mesh_shape(mesh)
+    dists = solve_dag(machine, graph, mesh_shape, table, overlap,
+                      candidate_fn=lambda l: executable_candidates(
+                          l, mesh_shape, allow_w_split))
+    names = [l.name for l in specs]
+    extra = [n for n in graph.nodes if n not in set(names)]
+    all_specs = list(specs) + [graph.nodes[n]["layer"] for n in extra]
+    return compile_plan(dists, all_specs, mesh, graph=graph,
+                        machine=machine, table=table, overlap=overlap,
+                        cost_specs=specs)

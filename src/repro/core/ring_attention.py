@@ -36,7 +36,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.utils import cdiv
+from repro.utils import cdiv, pcast_varying, shard_map
 
 NEG_INF = -1e30  # large-negative instead of -inf: keeps masked softmax NaN-free
 
@@ -96,7 +96,7 @@ def _ring_attention_local(q, k, v, *, axis_name, axis_size, vma_axes, scale,
         n_steps = min(axis_size, 1 + cdiv(max(window - 1, 0), sl))
 
     def var(x):  # mark device-varying for shard_map's VMA tracking
-        return lax.pcast(x, vma_axes, to="varying")
+        return pcast_varying(x, vma_axes)
 
     m = var(jnp.full((b, hq, sl), NEG_INF, jnp.float32))
     l = var(jnp.zeros((b, hq, sl), jnp.float32))
@@ -166,5 +166,7 @@ def ring_attention(q, k, v, *, mesh, seq_axis: str | None, scale=None,
         softcap=softcap, unroll=unroll)
     bspec = tuple(batch_axes) or None
     spec = P(bspec, seq_axis, None, None)
-    return jax.shard_map(fn, mesh=mesh, in_specs=(spec, spec, spec),
-                         out_specs=spec)(q, k, v)
+    # ppermute-only body, sharded outputs: gradient-safe without legacy
+    # replication tracking (which cannot transpose the ring scan).
+    return shard_map(fn, mesh=mesh, in_specs=(spec, spec, spec),
+                     out_specs=spec, legacy_check_rep=False)(q, k, v)

@@ -37,7 +37,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import halo as halo_lib
-from repro.utils import cdiv, same_pads
+from repro.utils import cdiv, same_pads, shard_map
 
 DIMNUMS = ("NHWC", "HWIO", "NHWC")
 
@@ -81,8 +81,27 @@ class ConvSharding:
                                     w_axis=ok(w, self.w_axis))
 
 
+def _conv_nhwc(x, w, strides, pads, backend: str = "xla"):
+    """Local dense conv — the per-shard compute the paper times as cuDNN.
+
+    backend='pallas' routes through the implicit-GEMM MXU kernel
+    (repro.kernels.conv2d).  That kernel computes VALID convolution with one
+    stride for both spatial dims, so padding is materialized first and
+    unequal strides fall back to XLA.  Off-TPU it runs in interpret mode
+    (numerics-identical, for tests and CPU smoke runs).
+    """
+    if backend == "pallas" and strides[0] == strides[1]:
+        from repro.kernels.conv2d import conv2d as pallas_conv2d
+        xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
+        return pallas_conv2d(xp, w, stride=strides[0],
+                             interpret=jax.default_backend() != "tpu")
+    return lax.conv_general_dilated(
+        x, w, window_strides=tuple(strides), padding=tuple(pads),
+        dimension_numbers=DIMNUMS)
+
+
 def _split_dim_conv(x, w, *, dim, s, k, lo, hi, axis_name, axis_size,
-                    other_pads, stride_other, overlap):
+                    other_pads, stride_other, overlap, backend="xla"):
     """Conv along one sharded spatial `dim` (1=H or 2=W) of local block x.
 
     `other_pads`/`stride_other` apply to the other (unsharded) spatial dim.
@@ -102,9 +121,7 @@ def _split_dim_conv(x, w, *, dim, s, k, lo, hi, axis_name, axis_size,
         strides = [0, 0]
         strides[dim - 1] = s
         strides[2 - dim] = stride_other
-        return lax.conv_general_dilated(
-            z, w, window_strides=tuple(strides), padding=tuple(pads),
-            dimension_numbers=DIMNUMS)
+        return _conv_nhwc(z, w, tuple(strides), tuple(pads), backend)
 
     if lo == 0 and hi == 0:
         return conv(x, (0, 0))
@@ -143,7 +160,7 @@ def _split_dim_conv(x, w, *, dim, s, k, lo, hi, axis_name, axis_size,
 
 
 def _local_conv(x, w, *, strides, sharding: ConvSharding, mesh_shape,
-                overlap: bool):
+                overlap: bool, backend: str = "xla"):
     """Shard-local forward conv (runs inside shard_map)."""
     k_h, k_w = w.shape[0], w.shape[1]
     s_h, s_w = strides
@@ -157,47 +174,54 @@ def _local_conv(x, w, *, strides, sharding: ConvSharding, mesh_shape,
         return _split_dim_conv(
             x, w, dim=2, s=s_w, k=k_w, lo=pw[0], hi=pw[1],
             axis_name=sharding.w_axis, axis_size=mesh_shape[sharding.w_axis],
-            other_pads=(0, 0), stride_other=s_h, overlap=overlap)
+            other_pads=(0, 0), stride_other=s_h, overlap=overlap,
+            backend=backend)
     if sharding.h_axis is not None:
         return _split_dim_conv(
             x, w, dim=1, s=s_h, k=k_h, lo=ph[0], hi=ph[1],
             axis_name=sharding.h_axis, axis_size=mesh_shape[sharding.h_axis],
-            other_pads=pw, stride_other=s_w, overlap=overlap)
+            other_pads=pw, stride_other=s_w, overlap=overlap,
+            backend=backend)
     if sharding.w_axis is not None:
         return _split_dim_conv(
             x, w, dim=2, s=s_w, k=k_w, lo=pw[0], hi=pw[1],
             axis_name=sharding.w_axis, axis_size=mesh_shape[sharding.w_axis],
-            other_pads=ph, stride_other=s_h, overlap=overlap)
+            other_pads=ph, stride_other=s_h, overlap=overlap,
+            backend=backend)
     raise AssertionError("not spatial")
 
 
 def spatial_conv2d(x, w, *, strides=(1, 1), sharding: ConvSharding,
-                   mesh=None, overlap: bool = True):
+                   mesh=None, overlap: bool = True, backend: str = "xla"):
     """'SAME'-padded strided conv2d under hybrid sample/spatial parallelism.
 
     x: (N, H, W, C) global array (sharded per `sharding` under jit).
     w: (K_h, K_w, C, F) weights, replicated across the spatial/batch axes
        (FSDP resharding at the shard_map boundary gathers them if needed).
+    backend: 'xla' (default) or 'pallas' — which kernel runs the local conv
+       each shard computes after its halo exchange (see _conv_nhwc).
     """
     if x.dtype != w.dtype:      # mixed-precision policy: compute in w's dtype
         x = x.astype(w.dtype)
     if not sharding.is_spatial:
         # pure sample parallelism: local conv, XLA batches it (paper Fig 1a).
         k_h, k_w = w.shape[0], w.shape[1]
-        y = lax.conv_general_dilated(
-            x, w, window_strides=strides,
-            padding=(same_pads(k_h, strides[0]), same_pads(k_w, strides[1])),
-            dimension_numbers=DIMNUMS)
-        return lax.with_sharding_constraint(y, sharding.x_spec()) \
-            if mesh is not None else y
+        y = _conv_nhwc(x, w, strides,
+                       (same_pads(k_h, strides[0]),
+                        same_pads(k_w, strides[1])), backend)
+        if mesh is not None:
+            y = lax.with_sharding_constraint(
+                y, jax.sharding.NamedSharding(mesh, sharding.x_spec()))
+        return y
 
     mesh = mesh or jax.sharding.get_abstract_mesh()
     mesh_shape = dict(mesh.shape)
     fn = functools.partial(_local_conv, strides=strides, sharding=sharding,
-                           mesh_shape=mesh_shape, overlap=overlap)
+                           mesh_shape=mesh_shape, overlap=overlap,
+                           backend=backend)
     spec = sharding.x_spec()
-    return jax.shard_map(fn, mesh=mesh, in_specs=(spec, P()),
-                         out_specs=spec)(x, w)
+    return shard_map(fn, mesh=mesh, in_specs=(spec, P()),
+                     out_specs=spec)(x, w)
 
 
 # ---------------------------------------------------------------------------
@@ -269,4 +293,4 @@ def spatial_pool(x, *, window=(3, 3), strides=(2, 2),
                            sharding=sharding, mesh_shape=dict(mesh.shape),
                            kind=kind)
     spec = sharding.x_spec()
-    return jax.shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec)(x)
+    return shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec)(x)

@@ -22,6 +22,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.spatial_conv import ConvSharding
+from repro.utils import shard_map
 
 
 def _stats(x, axes):
@@ -47,8 +48,8 @@ def batch_norm(x, gamma, beta, *, sharding: ConvSharding, mesh=None,
             return ((x - mean.astype(x.dtype)) * inv.astype(x.dtype))
         if scope == "local" and sharding.is_spatial and mesh is not None:
             spec = sharding.x_spec()
-            y = jax.shard_map(local_fn, mesh=mesh, in_specs=(spec,),
-                              out_specs=spec)(x)
+            y = shard_map(local_fn, mesh=mesh, in_specs=(spec,),
+                          out_specs=spec)(x)
         else:
             y = local_fn(x)
         return y * gamma + beta
@@ -76,5 +77,5 @@ def batch_norm(x, gamma, beta, *, sharding: ConvSharding, mesh=None,
         return (x - mean.astype(x.dtype)) * inv.astype(x.dtype)
 
     spec = sharding.x_spec()
-    y = jax.shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec)(x)
+    y = shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec)(x)
     return y * gamma + beta

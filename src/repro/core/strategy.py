@@ -138,12 +138,20 @@ def solve_dag(m: Machine, graph: nx.DiGraph,
               mesh_shape: Mapping[str, int],
               table: EmpiricalTable | None = None,
               overlap: bool = True,
-              allow_channel_filter: bool = False) -> dict[str, Dist]:
+              allow_channel_filter: bool = False,
+              candidate_fn=None) -> dict[str, Dist]:
     """graph: DiGraph whose nodes carry a 'layer': ConvLayer attribute.
+
+    `candidate_fn(layer) -> [Dist]` overrides the default candidate
+    generation — the plan compiler (core.plan) uses it to restrict the search
+    to distributions the runtime can execute.
 
     Returns {layer name: Dist}.
     """
     assert nx.is_directed_acyclic_graph(graph)
+    if candidate_fn is None:
+        candidate_fn = lambda l: candidate_dists(  # noqa: E731
+            l, mesh_shape, allow_channel_filter=allow_channel_filter)
     fixed: dict[str, Dist] = {}
     g = graph.copy()
     for u, v in g.edges:
@@ -156,9 +164,7 @@ def solve_dag(m: Machine, graph: nx.DiGraph,
             # fall back: any unfixed node, treated as a singleton path
             path = [next(n for n in g.nodes if n not in fixed)]
         layers = [graph.nodes[p]["layer"] for p in path]
-        cands = [[fixed[p]] if p in fixed else
-                 candidate_dists(layers[i], mesh_shape,
-                                 allow_channel_filter=allow_channel_filter)
+        cands = [[fixed[p]] if p in fixed else candidate_fn(layers[i])
                  for i, p in enumerate(path)]
         res = solve_line(m, layers, cands, mesh_shape, table, overlap)
         for p, d in zip(path, res.dists):

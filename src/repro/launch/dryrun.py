@@ -204,7 +204,7 @@ def build_cnn_cell(arch: str, mesh, batch: int = 32, variant: str = "base"):
         x = sds((batch, cfg.input_hw, cfg.input_hw, cfg.in_channels),
                 jnp.float32, mesh, P(ba, "model", None, None))
         y = sds((batch,), jnp.int32, mesh, P(ba))
-        loss = functools.partial(M.loss_fn, cfg=cfg, sharding=sh, mesh=mesh)
+        loss = functools.partial(M.loss_fn, cfg=cfg, plan=sh, mesh=mesh)
         bdict = {"image": x, "label": y}
     else:
         from repro.models.cnn import meshnet as M
@@ -212,7 +212,7 @@ def build_cnn_cell(arch: str, mesh, batch: int = 32, variant: str = "base"):
                 jnp.float32, mesh, P(ba, "model", None, None))
         y = sds((batch, cfg.out_hw, cfg.out_hw, 1), jnp.float32,
                 mesh, P(ba, None, None, None))
-        loss = functools.partial(M.loss_fn, cfg=cfg, shardings=sh, mesh=mesh)
+        loss = functools.partial(M.loss_fn, cfg=cfg, plan=sh, mesh=mesh)
         bdict = {"image": x, "label": y}
     p_abs = jax.eval_shape(lambda k: M.init(k, cfg), jax.random.PRNGKey(0))
     pspecs = SH.fsdp_tree_specs(p_abs, mesh)

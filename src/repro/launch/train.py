@@ -7,7 +7,9 @@ Runs the resilient loop (checkpoint/restart, straggler monitor) around the
 jit'd train step.  On this CPU container use --smoke (reduced config); the
 full configs are for the TPU pods the dry-run targets.  `--arch mesh1k/
 mesh2k/resnet50 --smoke` trains the paper's CNN workloads under hybrid
-sample x spatial parallelism.
+sample x spatial parallelism; add `--strategy auto` to run the paper's §V-C
+strategy optimizer at startup and execute its per-layer distribution plan
+(with automatic inter-layer resharding) instead of the uniform default.
 """
 from __future__ import annotations
 
@@ -17,7 +19,6 @@ import logging
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -34,36 +35,63 @@ from repro.utils import BF16, FP32, human_count, tree_num_params
 logging.basicConfig(level=logging.INFO)
 
 
+def build_cnn_plan(args, arch, cfg, mesh, ba):
+    """--strategy uniform: the legacy one-ConvSharding-everywhere plan.
+    --strategy auto: run the §V-C optimizer on the arch's layer DAG and
+    compile the solved per-layer distributions (core.plan)."""
+    from repro.core import plan as plan_lib
+    from repro.core.perfmodel import TPU_V5E
+    from repro.core.spatial_conv import ConvSharding
+    if arch == "resnet50":
+        from repro.models.cnn import resnet as M
+        specs = M.layer_specs(args.batch, cfg)
+        graph = M.resnet_graph(args.batch, cfg)
+    else:
+        from repro.models.cnn import meshnet as M
+        specs = M.layer_specs(cfg, args.batch)
+        graph = None
+    if args.strategy == "auto":
+        t0 = time.time()
+        if graph is not None:
+            plan = plan_lib.plan_graph(TPU_V5E, graph, specs, mesh)
+        else:
+            plan = plan_lib.plan_line(TPU_V5E, specs, mesh)
+        print(f"strategy optimizer ({time.time() - t0:.2f}s):")
+        print(plan.describe())
+    else:
+        plan = plan_lib.NetworkPlan.uniform(
+            ConvSharding(batch_axes=ba, h_axis="model"),
+            [l.name for l in specs])
+    return plan, specs
+
+
 def build(args, mesh):
     arch = registry.canon(args.arch)
     ba = batch_axes(mesh)
     if arch in registry.CNN_ARCHS:
-        from repro.core.spatial_conv import ConvSharding
         cfg = registry.get(arch, smoke=args.smoke)
-        sh = ConvSharding(batch_axes=ba, h_axis="model")
+        plan, specs = build_cnn_plan(args, arch, cfg, mesh, ba)
         if arch == "resnet50":
             from repro.models.cnn import resnet as M
-            loss = functools.partial(M.loss_fn, cfg=cfg, sharding=sh,
-                                     mesh=mesh)
             mk = lambda s: pipeline.synthetic_imagenet_batch(
                 s, args.batch, cfg.input_hw, cfg.n_classes)
         else:
             from repro.models.cnn import meshnet as M
-            loss = functools.partial(M.loss_fn, cfg=cfg, shardings=sh,
-                                     mesh=mesh)
             mk = lambda s: pipeline.synthetic_mesh_batch(
                 s, args.batch, cfg.input_hw, cfg.in_channels,
                 out_hw=cfg.out_hw)
+        loss = functools.partial(M.loss_fn, cfg=cfg, plan=plan, mesh=mesh)
         params = M.init(jax.random.PRNGKey(args.seed), cfg)
         opt = sgd(warmup_cosine(args.lr, 10, args.steps), momentum=0.9)
         prec = FP32
+        first = specs[0]
+        im_spec = plan.input_spec(first.name, first.h, first.w, first.k,
+                                  first.s, mesh)
 
         def put(b):
             out = {}
             for k, v in b.items():
-                spec = P(ba, "model") if v.ndim == 4 and \
-                    v.shape[1] % dict(mesh.shape).get("model", 1) == 0 \
-                    else P(ba)
+                spec = im_spec if k == "image" else P(ba)
                 out[k] = jax.device_put(v, NamedSharding(mesh, spec))
             return out
     else:
@@ -94,6 +122,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--strategy", default="uniform",
+                    choices=["uniform", "auto"],
+                    help="CNN parallelization: 'uniform' applies one hybrid "
+                         "ConvSharding to every layer (legacy); 'auto' runs "
+                         "the paper's §V-C optimizer at startup and executes "
+                         "the solved per-layer plan with resharding")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)

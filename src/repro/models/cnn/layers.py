@@ -18,6 +18,7 @@ from jax import lax
 
 from repro.core.spatial_conv import ConvSharding, spatial_conv2d, spatial_pool
 from repro.core.spatial_norm import batch_norm
+from repro.utils import shard_map
 
 
 def conv_init(key, k: int, c_in: int, c_out: int, dtype=jnp.float32):
@@ -28,11 +29,12 @@ def conv_init(key, k: int, c_in: int, c_out: int, dtype=jnp.float32):
 
 
 def conv_apply(params, x, *, stride=1, sharding: ConvSharding,
-               mesh=None, overlap=True):
+               mesh=None, overlap=True, backend="xla"):
     sharding = sharding.fit(x.shape[1], x.shape[2], params["w"].shape[0],
                             stride, mesh)
     return spatial_conv2d(x, params["w"], strides=(stride, stride),
-                          sharding=sharding, mesh=mesh, overlap=overlap)
+                          sharding=sharding, mesh=mesh, overlap=overlap,
+                          backend=backend)
 
 
 def bn_init(c: int, dtype=jnp.float32):
@@ -79,8 +81,8 @@ def global_avg_pool(x, *, sharding: ConvSharding, mesh=None):
 
     spec = sharding.x_spec()
     out_spec = P(spec[0], None)
-    return jax.shard_map(fn, mesh=mesh, in_specs=(spec,),
-                         out_specs=out_spec)(x)
+    return shard_map(fn, mesh=mesh, in_specs=(spec,),
+                     out_specs=out_spec)(x)
 
 
 def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):

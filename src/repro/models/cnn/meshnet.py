@@ -11,12 +11,13 @@ for spatial parallelism.
 
 Per the paper's experiments, one ConvSharding is applied to every layer of a
 given configuration ("the same data decomposition for every layer"), but
-`apply` accepts a per-layer list for strategy-optimizer-driven runs.
+`apply` accepts a `NetworkPlan` (core.plan) — per-layer distributions with
+explicit §III-C reshard points, keyed by the `layer_specs` names — for
+strategy-optimizer-driven runs, and a legacy per-layer ConvSharding list.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -61,18 +62,31 @@ def init(key, cfg: MeshNetConfig, dtype=jnp.float32):
     return params
 
 
-def apply(params, x, cfg: MeshNetConfig,
-          shardings: ConvSharding | Sequence[ConvSharding],
-          mesh=None, overlap=True):
-    """x: (N, H, W, 18) -> per-pixel logits (N, H/64, W/64, n_classes)."""
-    n_layers = len(cfg.widths) * cfg.convs_per_block + 1
-    if isinstance(shardings, ConvSharding):
-        shardings = [shardings] * n_layers
+def layer_names(cfg: MeshNetConfig) -> list[str]:
+    """Execution-order layer names, identical to `layer_specs`."""
+    return [f"conv{b+1}_{i+1}" for b in range(len(cfg.widths))
+            for i in range(cfg.convs_per_block)] + ["pred"]
+
+
+def apply(params, x, cfg: MeshNetConfig, plan=None, mesh=None, overlap=True):
+    """x: (N, H, W, 18) -> per-pixel logits (N, H/64, W/64, n_classes).
+
+    `plan`: a core.plan.NetworkPlan, a single legacy ConvSharding (uniform),
+    or a legacy per-layer ConvSharding list aligned with `layer_names`.
+    """
+    from repro.core.plan import NetworkPlan
+    names = layer_names(cfg)
+    if isinstance(plan, (list, tuple)):
+        plan = NetworkPlan.from_shardings(names, plan)
+    else:
+        plan = NetworkPlan.of(plan)
     li = 0
     for b in range(len(cfg.widths)):
         for i in range(cfg.convs_per_block):
-            sh = shardings[li]
+            name = names[li]
+            sh = plan.sharding(name)
             stride = 2 if i == 0 else 1
+            x = plan.reshard(x, name, mesh)
             x = L.conv_apply(params[li]["conv"], x, stride=stride,
                              sharding=sh, mesh=mesh, overlap=overlap)
             shb = sh.fit(x.shape[1], x.shape[2], 1, 1, mesh)
@@ -80,15 +94,17 @@ def apply(params, x, cfg: MeshNetConfig,
                            scope=cfg.bn_scope)
             x = L.relu(x)
             li += 1
-    x = L.conv_apply(params[li]["conv"], x, stride=1, sharding=shardings[li],
-                     mesh=mesh, overlap=overlap)
+    x = plan.reshard(x, "pred", mesh)
+    x = L.conv_apply(params[li]["conv"], x, stride=1,
+                     sharding=plan.sharding("pred"), mesh=mesh,
+                     overlap=overlap)
     return x
 
 
-def loss_fn(params, batch, cfg: MeshNetConfig, shardings, mesh=None,
+def loss_fn(params, batch, cfg: MeshNetConfig, plan=None, mesh=None,
             overlap=True):
     """Per-pixel sigmoid BCE (semantic segmentation of tangling cells)."""
-    logits = apply(params, batch["image"], cfg, shardings, mesh, overlap)
+    logits = apply(params, batch["image"], cfg, plan, mesh, overlap)
     labels = batch["label"]
     logits = logits.astype(jnp.float32)
     bce = jnp.maximum(logits, 0) - logits * labels \

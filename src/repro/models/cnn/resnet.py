@@ -1,8 +1,12 @@
 """ResNet-50 (He et al.) for ImageNet-1K — the paper's §VI-B2 workload.
 
-Functional implementation on the distribution-aware layers; every conv/pool
-accepts a ConvSharding so the whole network runs under sample, spatial or
-hybrid parallelism (paper Table III uses 32 samples per 1/2/4 GPUs).
+Functional implementation on the distribution-aware layers; `apply` executes
+a `NetworkPlan` (core.plan): a per-layer distribution for every conv/pool —
+keyed by the same names `resnet_graph` exports to the strategy optimizer —
+with explicit §III-C reshard points at distribution changes.  A legacy
+single `ConvSharding` is accepted too (lowered to a uniform plan), which
+runs the whole network under one sample/spatial/hybrid distribution exactly
+as before (paper Table III uses 32 samples per 1/2/4 GPUs).
 
 `resnet_graph` exports the branchy layer DAG consumed by the strategy
 optimizer's longest-path-first pass (paper §V-C).
@@ -72,54 +76,69 @@ def init(key, cfg: ResNetConfig = RESNET50, dtype=jnp.float32):
     return params
 
 
-def _bottleneck_apply(p, x, *, stride, sh: ConvSharding, mesh, scope,
-                      overlap):
-    def bn(pp, z):
-        shb = sh.fit(z.shape[1], z.shape[2], 1, 1, mesh)
+def _bottleneck_apply(p, x, *, pre, stride, plan, mesh, scope, overlap):
+    """`pre` is the block's name prefix (e.g. "res3a_branch"): convs are
+    named pre+"2a"/"2b"/"2c" and the projection pre+"1", matching
+    `resnet_graph`, so the plan addresses every conv individually."""
+    def conv(name, pp, z, s):
+        z = plan.reshard(z, name, mesh)
+        return L.conv_apply(pp, z, stride=s, sharding=plan.sharding(name),
+                            mesh=mesh, overlap=overlap)
+
+    def bn(name, pp, z):
+        shb = plan.sharding(name).fit(z.shape[1], z.shape[2], 1, 1, mesh)
         return L.bn_apply(pp, z, sharding=shb, mesh=mesh, scope=scope)
 
-    y = L.conv_apply(p["conv1"], x, stride=1, sharding=sh, mesh=mesh,
-                     overlap=overlap)
-    y = L.relu(bn(p["bn1"], y))
-    y = L.conv_apply(p["conv2"], y, stride=stride, sharding=sh, mesh=mesh,
-                     overlap=overlap)
-    y = L.relu(bn(p["bn2"], y))
-    y = L.conv_apply(p["conv3"], y, stride=1, sharding=sh, mesh=mesh,
-                     overlap=overlap)
-    y = bn(p["bn3"], y)
+    y = conv(pre + "2a", p["conv1"], x, 1)
+    y = L.relu(bn(pre + "2a", p["bn1"], y))
+    y = conv(pre + "2b", p["conv2"], y, stride)
+    y = L.relu(bn(pre + "2b", p["bn2"], y))
+    y = conv(pre + "2c", p["conv3"], y, 1)
+    y = bn(pre + "2c", p["bn3"], y)
     if "proj" in p:
-        x = L.conv_apply(p["proj"], x, stride=stride, sharding=sh, mesh=mesh,
-                         overlap=overlap)
-        x = bn(p["bn_proj"], x)
+        x = conv(pre + "1", p["proj"], x, stride)
+        x = bn(pre + "1", p["bn_proj"], x)
     return L.relu(x + y)
 
 
-def apply(params, x, cfg: ResNetConfig = RESNET50,
-          sharding: ConvSharding = ConvSharding(), mesh=None, overlap=True):
-    """x: (N, H, W, 3) -> logits (N, n_classes)."""
-    sh = sharding
-    x = L.conv_apply(params["conv1"], x, stride=2, sharding=sh, mesh=mesh,
+def apply(params, x, cfg: ResNetConfig = RESNET50, plan=None, mesh=None,
+          overlap=True):
+    """x: (N, H, W, 3) -> logits (N, n_classes).
+
+    `plan`: a core.plan.NetworkPlan (per-layer distributions + reshard
+    points) or a single legacy ConvSharding applied uniformly.
+    """
+    from repro.core.plan import NetworkPlan
+    plan = NetworkPlan.of(plan)
+    x = plan.reshard(x, "conv1", mesh)
+    x = L.conv_apply(params["conv1"], x, stride=2,
+                     sharding=plan.sharding("conv1"), mesh=mesh,
                      overlap=overlap)
-    shb = sh.fit(x.shape[1], x.shape[2], 1, 1, mesh)
+    shb = plan.sharding("conv1").fit(x.shape[1], x.shape[2], 1, 1, mesh)
     x = L.relu(L.bn_apply(params["bn1"], x, sharding=shb, mesh=mesh,
                           scope=cfg.bn_scope))
-    x = L.max_pool(x, window=3, stride=2, sharding=sh, mesh=mesh)
+    x = plan.reshard(x, "pool1", mesh)
+    x = L.max_pool(x, window=3, stride=2, sharding=plan.sharding("pool1"),
+                   mesh=mesh)
     bi = 0
+    last = "pool1"
     for s, (n_blocks, width) in enumerate(zip(cfg.stages, cfg.widths)):
         for b in range(n_blocks):
             stride = 2 if (b == 0 and s > 0) else 1
-            x = _bottleneck_apply(params["blocks"][bi], x, stride=stride,
-                                  sh=sh, mesh=mesh, scope=cfg.bn_scope,
-                                  overlap=overlap)
+            pre = f"res{s+2}{chr(ord('a')+b)}_branch"
+            x = _bottleneck_apply(params["blocks"][bi], x, pre=pre,
+                                  stride=stride, plan=plan, mesh=mesh,
+                                  scope=cfg.bn_scope, overlap=overlap)
+            last = pre + "2c"
             bi += 1
-    x = L.global_avg_pool(x, sharding=sh.fit(x.shape[1], x.shape[2], 1, 1,
-                                             mesh), mesh=mesh)
+    x = L.global_avg_pool(x, sharding=plan.sharding(last).fit(
+        x.shape[1], x.shape[2], 1, 1, mesh), mesh=mesh)
     return L.dense_apply(params["head"], x)
 
 
-def loss_fn(params, batch, cfg: ResNetConfig = RESNET50,
-            sharding: ConvSharding = ConvSharding(), mesh=None, overlap=True):
-    logits = apply(params, batch["image"], cfg, sharding, mesh, overlap)
+def loss_fn(params, batch, cfg: ResNetConfig = RESNET50, plan=None,
+            mesh=None, overlap=True):
+    logits = apply(params, batch["image"], cfg, plan, mesh, overlap)
     logits = logits.astype(jnp.float32)
     logp = jax.nn.log_softmax(logits)
     nll = -jnp.take_along_axis(logp, batch["label"][:, None], axis=1)
@@ -178,7 +197,9 @@ def resnet_graph(n: int, cfg: ResNetConfig = RESNET50) -> nx.DiGraph:
             g.add_edge(prev, names[0])
             g.add_edge(names[0], names[1])
             g.add_edge(names[1], names[2])
-            if c_in != width * EXPANSION:
+            # projection branch exists iff init added one (channel change
+            # OR strided block — e.g. equal-width stage transitions)
+            if c_in != width * EXPANSION or stride != 1:
                 pname = f"res{s+2}{chr(ord('a')+b)}_branch1"
                 add(pname, ConvLayer(pname, n=n, c=c_in, h=hw, w=hw,
                                      f=width * EXPANSION, k=1, s=stride))

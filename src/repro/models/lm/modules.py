@@ -21,7 +21,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.ring_attention import ring_attention
 from repro.core.seq_ssm import seq_prefix_state
 from repro.models.lm.config import LMConfig
-from repro.utils import cdiv
+from repro.utils import cdiv, pcast_varying, shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -278,8 +278,9 @@ def ssm_init(key, cfg: LMConfig, dtype):
 
 def _match_vma(x, like):
     """Mark x varying over the same manual axes as `like` (shard_map VMA)."""
-    vma = getattr(jax.typeof(like), "vma", frozenset())
-    return lax.pcast(x, tuple(vma), to="varying") if vma else x
+    typeof = getattr(jax, "typeof", None)   # absent pre-0.6 (no VMA there)
+    vma = getattr(typeof(like), "vma", frozenset()) if typeof else frozenset()
+    return pcast_varying(x, tuple(vma))
 
 
 def _ssd_chunked(xdt, la, B, C, chunk: int, h0=None):
@@ -391,8 +392,8 @@ def ssm_apply(p, x, cfg: LMConfig, ctx: ShardCtx):
     fn = functools.partial(_ssd_local, cfg=cfg, axis_name=ctx.seq_axis,
                            axis_size=ctx.seq_size)
     pspec = jax.tree.map(lambda _: P(), p)
-    return jax.shard_map(lambda x, p: fn(x, p), mesh=ctx.mesh,
-                         in_specs=(spec, pspec), out_specs=spec)(x, p)
+    return shard_map(lambda x, p: fn(x, p), mesh=ctx.mesh,
+                     in_specs=(spec, pspec), out_specs=spec)(x, p)
 
 
 def ssm_decode_step(p, x, cfg: LMConfig, state, conv_buf):

@@ -27,6 +27,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.models.lm.config import LMConfig
+from repro.utils import pcast_varying, shard_map
 
 
 def _ring(x, axis, axis_size):
@@ -35,8 +36,9 @@ def _ring(x, axis, axis_size):
 
 
 def _vma(x, like):
-    vma = getattr(jax.typeof(like), "vma", frozenset())
-    return lax.pcast(x, tuple(vma), to="varying") if vma else x
+    typeof = getattr(jax, "typeof", None)   # absent pre-0.6 (no VMA there)
+    vma = getattr(typeof(like), "vma", frozenset()) if typeof else frozenset()
+    return pcast_varying(x, tuple(vma))
 
 
 def _lookup_local(tokens, table, *, axis, axis_size, unroll):
@@ -70,10 +72,13 @@ def embed_lookup(table, cfg: LMConfig, tokens, ctx, seq_axis="model"):
     fn = functools.partial(_lookup_local, axis=seq_axis, axis_size=n,
                            unroll=ctx.unroll)
     bspec = tuple(ctx.batch_axes) or None
-    return jax.shard_map(
+    # ppermute-only body, sharded outputs: gradient-safe without legacy
+    # replication tracking (which cannot transpose the ring scan).
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(P(bspec, seq_axis), P(seq_axis, None)),
-        out_specs=P(bspec, seq_axis, None))(tokens, table)
+        out_specs=P(bspec, seq_axis, None),
+        legacy_check_rep=False)(tokens, table)
 
 
 def _logits_chunk(x, tbl, lo, *, scale, softcap, v_real, vshard):
@@ -222,7 +227,7 @@ def xent_loss(table, cfg: LMConfig, x, labels, ctx, seq_axis="model",
                            softcap=cfg.final_softcap, unroll=ctx.unroll,
                            v_real=v_real)
     bspec = tuple(ctx.batch_axes) or None
-    s, n = jax.shard_map(
+    s, n = shard_map(
         fn, mesh=mesh,
         in_specs=(P(bspec, seq_axis, None), P(bspec, seq_axis),
                   P(seq_axis, None)),

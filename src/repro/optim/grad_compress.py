@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.utils import pcast_varying, shard_map
+
 
 def _quantize_int8(x):
     scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
@@ -50,13 +52,13 @@ def cross_pod_mean(grads, *, mesh, method: str = "bf16",
         # psum of a pod-INVARIANT operand crashes this XLA version
         # ("Invalid binary instruction opcode copy"); marking the operand
         # varying first is free and matches the real (per-pod grads) use.
-        return lax.pcast(x, "pod", to="varying")
+        return pcast_varying(x, ("pod",))
 
     if method == "none":
         f = lambda g: jax.tree.map(
             lambda x: lax.psum(_vary(x), "pod") / npods, g)
-        out = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
-                            axis_names={"pod"})(grads)
+        out = shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                        axis_names={"pod"})(grads)
         return out, error_feedback
 
     if method == "bf16":
@@ -68,8 +70,8 @@ def cross_pod_mean(grads, *, mesh, method: str = "bf16",
                 return (jnp.sum(xs.astype(jnp.float32), 0)
                         / npods).astype(x.dtype)
             return jax.tree.map(one, g)
-        out = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
-                            axis_names={"pod"}, check_vma=False)(grads)
+        out = shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                        axis_names={"pod"}, check_vma=False)(grads)
         return out, error_feedback
 
     if method == "int8_ef":
@@ -103,7 +105,7 @@ def cross_pod_mean(grads, *, mesh, method: str = "bf16",
 
         efspec = jax.tree.map(lambda _: P("pod"), grads)
         gspec = jax.tree.map(lambda _: P(), grads)
-        out, new_ef = jax.shard_map(
+        out, new_ef = shard_map(
             f, mesh=mesh, in_specs=(gspec, efspec), out_specs=(gspec, efspec),
             axis_names={"pod"}, check_vma=False)(grads, error_feedback)
         return out, new_ef

@@ -10,6 +10,49 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=None, legacy_check_rep=None):
+    """`jax.shard_map` with a fallback to the pre-0.6 experimental API.
+
+    New-API kwargs translate: `axis_names` (manual axes) becomes the legacy
+    `auto` complement; `check_vma` maps onto `check_rep`.
+
+    `legacy_check_rep` overrides check_rep on the legacy path only: legacy
+    replication tracking cannot transpose a scan inside shard_map (cotangent
+    carries have unknown rep), so bodies that are gradient-safe without
+    tracking — pure ppermute rings with no psum and no replicated outputs —
+    pass False here.  Bodies with psum/replicated outputs must keep tracking
+    on: with check_rep=False their legacy transpose over-accumulates by the
+    axis size, corrupting gradients.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as legacy
+    # axis_names (partial-manual) is intentionally dropped: legacy `auto=`
+    # partial-manual trips an SPMD-partitioner check in this XLA build, and
+    # our partial-manual callers only run elementwise math + collectives on
+    # the manual axes, which is equally valid fully manual.
+    check_rep = legacy_check_rep if legacy_check_rep is not None \
+        else (check_vma if check_vma is not None else True)
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_rep)
+
+
+def pcast_varying(x, axes):
+    """`lax.pcast(..., to='varying')` under VMA-tracking jax; identity on
+    pre-VMA jax, where there is no varying/invariant distinction to mark."""
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is None or not axes:
+        return x
+    return pcast(x, axes, to="varying")
+
+
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
 

@@ -2,7 +2,7 @@
 process keeps a single CPU device (the 512-device env is dry-run-only).
 
 Usage:  python tests/dist_checks.py <group>
-Groups: conv | attention | ssm | models | train | compress
+Groups: conv | attention | ssm | models | train | compress | plan
 Exits 0 on success; any assertion failure exits non-zero.
 """
 import os
@@ -147,9 +147,10 @@ def check_ssm():
         outs.append(st)
         st = st * a[i] + s[i]
     ref = jnp.stack(outs)
+    from repro.utils import shard_map
     mesh1 = make_mesh(data=1, model=8)
     with mesh1:
-        f = jax.shard_map(
+        f = shard_map(
             lambda a, s: seq_prefix_state(a[0], s[0], "model", 8)[None],
             mesh=mesh1, in_specs=(P("model"), P("model")),
             out_specs=P("model"))
@@ -261,7 +262,7 @@ def check_train():
     sh = ConvSharding(batch_axes=("pod", "data"), h_axis="model")
     params = shard_tree(meshnet.init(jax.random.PRNGKey(0), cfg), mesh,
                         lambda x: P())
-    loss = functools.partial(meshnet.loss_fn, cfg=cfg, shardings=sh,
+    loss = functools.partial(meshnet.loss_fn, cfg=cfg, plan=sh,
                              mesh=mesh)
     opt = sgd(0.05, momentum=0.9)
     tstep = make_train_step(
@@ -313,6 +314,89 @@ def check_train():
         shutil.rmtree(ckdir, ignore_errors=True)
 
 
+def check_plan():
+    """Uniform vs solved-auto NetworkPlan vs single-device oracle on a 2x2
+    mesh: loss and grads agree (numerically; resharding changes fp order)."""
+    from repro.core import plan as plan_lib
+    from repro.core.distribution import Dist
+    from repro.core.perfmodel import TPU_V5E
+    from repro.core.spatial_conv import ConvSharding
+    from repro.models.cnn import meshnet, resnet
+    from repro.data.pipeline import synthetic_mesh_batch
+
+    mesh = make_mesh(data=2, model=2)
+    uni = ConvSharding(batch_axes=("data",), h_axis="model")
+
+    # --- meshnet (line network, solve_line) -------------------------------
+    # global-scope BN: per-shard ("local") statistics legitimately differ
+    # between decompositions, so oracle comparison needs aggregated stats
+    cfg = meshnet.MeshNetConfig("t", input_hw=32, in_channels=4,
+                                convs_per_block=1, widths=(8, 16),
+                                bn_scope="global")
+    specs = meshnet.layer_specs(cfg, 4)
+    auto = plan_lib.plan_line(TPU_V5E, specs, mesh)
+    uplan = plan_lib.NetworkPlan.uniform(uni, meshnet.layer_names(cfg))
+    params = meshnet.init(jax.random.PRNGKey(0), cfg)
+    b = {k: jnp.asarray(v) for k, v in
+         synthetic_mesh_batch(0, 4, 32, 4, out_hw=8).items()}
+    ref_l = meshnet.loss_fn(params, b, cfg, ConvSharding())
+    ref_g = jax.grad(lambda p: meshnet.loss_fn(p, b, cfg,
+                                               ConvSharding()))(params)
+    for plan in (uplan, auto):
+        with mesh:
+            got_l = jax.jit(lambda p, bb: meshnet.loss_fn(
+                p, bb, cfg, plan, mesh))(params, b)
+            got_g = jax.jit(jax.grad(lambda p: meshnet.loss_fn(
+                p, b, cfg, plan, mesh)))(params)
+        np.testing.assert_allclose(float(got_l), float(ref_l), rtol=2e-5)
+        for a, r in zip(jax.tree.leaves(got_g), jax.tree.leaves(ref_g)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                       rtol=3e-4, atol=3e-5)
+
+    # --- a genuinely mixed plan with forced reshard points ----------------
+    hybrid = Dist("hybrid", {"N": ("data",), "H": ("model",)})
+    sample = Dist("sample", {"N": ("data", "model")})
+    mixed = plan_lib.compile_plan(
+        {"conv1_1": hybrid, "conv2_1": sample, "pred": hybrid},
+        specs, mesh)
+    assert mixed.n_reshards == 2, mixed.describe()
+    with mesh:
+        got_l = jax.jit(lambda p, bb: meshnet.loss_fn(
+            p, bb, cfg, mixed, mesh))(params, b)
+        got_g = jax.jit(jax.grad(lambda p: meshnet.loss_fn(
+            p, b, cfg, mixed, mesh)))(params)
+    np.testing.assert_allclose(float(got_l), float(ref_l), rtol=2e-5)
+    for a, r in zip(jax.tree.leaves(got_g), jax.tree.leaves(ref_g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   rtol=3e-4, atol=3e-5)
+
+    # --- resnet (branchy DAG, solve_dag longest-path-first) ---------------
+    rcfg = resnet.ResNetConfig(name="tiny", input_hw=32, n_classes=10,
+                               stages=(1, 1), widths=(8, 16),
+                               bn_scope="global")
+    graph = resnet.resnet_graph(2, rcfg)
+    rspecs = resnet.layer_specs(2, rcfg)
+    rauto = plan_lib.plan_graph(TPU_V5E, graph, rspecs, mesh)
+    rparams = resnet.init(jax.random.PRNGKey(0), rcfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    lbl = jnp.array([1, 7])
+    rb = {"image": x, "label": lbl}
+    ref_l = resnet.loss_fn(rparams, rb, rcfg, ConvSharding())
+    ref_g = jax.grad(lambda p: resnet.loss_fn(p, rb, rcfg,
+                                              ConvSharding()))(rparams)
+    rub = plan_lib.NetworkPlan.uniform(uni, [l.name for l in rspecs])
+    for plan in (rub, rauto):
+        with mesh:
+            got_l = jax.jit(lambda p, bb: resnet.loss_fn(
+                p, bb, rcfg, plan, mesh))(rparams, rb)
+            got_g = jax.jit(jax.grad(lambda p: resnet.loss_fn(
+                p, rb, rcfg, plan, mesh)))(rparams)
+        np.testing.assert_allclose(float(got_l), float(ref_l), rtol=3e-5)
+        for a, r in zip(jax.tree.leaves(got_g), jax.tree.leaves(ref_g)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                       rtol=5e-4, atol=5e-5)
+
+
 def check_compress():
     from repro.optim.grad_compress import cross_pod_mean
     mesh = make_mesh(data=2, model=2, pod=2)
@@ -346,7 +430,7 @@ def check_compress():
 
 GROUPS = {"conv": check_conv, "attention": check_attention,
           "ssm": check_ssm, "models": check_models, "train": check_train,
-          "compress": check_compress}
+          "compress": check_compress, "plan": check_plan}
 
 if __name__ == "__main__":
     GROUPS[sys.argv[1]]()

@@ -14,6 +14,8 @@ import pytest
 
 from conftest import run_dist_group
 
+pytestmark = pytest.mark.slow      # subprocess, 8 host devices
+
 
 @pytest.mark.parametrize("group", ["conv", "attention", "ssm", "models",
                                    "train", "compress"])

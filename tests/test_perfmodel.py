@@ -4,7 +4,7 @@ import dataclasses
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import perfmodel as pm
 from repro.core import strategy as strat

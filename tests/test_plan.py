@@ -1,0 +1,184 @@
+"""Strategy-to-execution plan compiler (core.plan) tests.
+
+Single-device half here; the 4-device uniform-vs-auto agreement check lives
+in tests/dist_checks.py group 'plan' (subprocess, 8 host devices).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_dist_group
+from repro.core.distribution import Dist
+from repro.core.perfmodel import ConvLayer, LASSEN, TPU_V5E
+from repro.core.plan import (NetworkPlan, PlanError, compile_plan,
+                             dist_to_sharding, executable_candidates,
+                             normalize_dist, plan_graph, plan_line)
+from repro.core.spatial_conv import ConvSharding
+from repro.data.pipeline import synthetic_mesh_batch
+from repro.launch.mesh import make_mesh
+from repro.models.cnn import meshnet, resnet
+
+MS22 = {"data": 2, "model": 2}
+
+
+# ------------------------------------------------------------- lowering --
+def test_dist_to_sharding_basic():
+    d = Dist("hybrid", {"N": ("data",), "H": ("model",)})
+    sh = dist_to_sharding(d, MS22)
+    assert sh == ConvSharding(batch_axes=("data",), h_axis="model")
+    d = Dist("spatial2d", {"H": ("model",), "W": ("data",)})
+    sh = dist_to_sharding(d, MS22)
+    assert sh == ConvSharding(batch_axes=(), h_axis="model", w_axis="data")
+
+
+def test_dist_to_sharding_rejects_non_executable():
+    with pytest.raises(PlanError):   # channel/filter: perf-model only
+        dist_to_sharding(Dist("cf", {"N": ("data",), "C": ("model",),
+                                     "F": ("model",)}), MS22)
+    with pytest.raises(PlanError):   # multi-axis spatial
+        dist_to_sharding(Dist("s", {"H": ("data", "model")}), MS22)
+    with pytest.raises(PlanError):   # non-CNN dim
+        dist_to_sharding(Dist("seq", {"N": ("data",), "S": ("model",)}),
+                         MS22)
+
+
+def test_normalize_drops_size1_axes():
+    ms = {"data": 1, "model": 1}
+    d = normalize_dist(Dist("hybrid", {"N": ("data",), "H": ("model",)}), ms)
+    assert d.dims == {}
+    # and the lowered sharding takes the dense single-device path
+    assert dist_to_sharding(d, ms) == ConvSharding()
+
+
+def test_executable_candidates_never_empty():
+    # N=2 on a 4-way mesh, spatial shards smaller than the kernel: nothing
+    # parallel fits -> the replicated fallback keeps the solver total
+    layer = ConvLayer("tiny", n=2, c=8, h=4, w=4, f=8, k=3, s=1)
+    cands = executable_candidates(layer, {"data": 2, "model": 2})
+    assert cands, "fallback missing"
+    assert all(dist_to_sharding(d, MS22) is not None for d in cands)
+
+
+# ----------------------------------------------------------- compilation --
+def test_compile_plan_reshard_points_and_cost():
+    specs = [ConvLayer("a", n=8, c=4, h=32, w=32, f=8, k=3, s=1),
+             ConvLayer("b", n=8, c=8, h=32, w=32, f=8, k=3, s=1),
+             ConvLayer("c", n=8, c=8, h=32, w=32, f=8, k=3, s=1)]
+    dists = {"a": Dist("hybrid", {"N": ("data",), "H": ("model",)}),
+             "b": Dist("sample", {"N": ("data", "model")}),
+             "c": Dist("sample", {"N": ("data", "model")})}
+    plan = compile_plan(dists, specs, MS22, machine=LASSEN)
+    assert not plan.layers["a"].reshard_in
+    assert plan.layers["b"].reshard_in      # hybrid -> sample: §III-C shuffle
+    assert not plan.layers["c"].reshard_in  # same dist: free
+    assert plan.n_reshards == 1
+    assert plan.predicted is not None and plan.predicted["shuffle"] > 0
+
+
+def test_compile_plan_demotes_unfit_geometry():
+    # H=4 over 2-way model with k=3: shard (2 rows) < kernel -> demoted at
+    # compile time (the ConvSharding.fit edge case), recorded in the note
+    specs = [ConvLayer("a", n=8, c=4, h=4, w=4, f=8, k=3, s=1)]
+    dists = {"a": Dist("hybrid", {"N": ("data",), "H": ("model",)})}
+    plan = compile_plan(dists, specs, MS22)
+    lp = plan.layers["a"]
+    assert lp.sharding.h_axis is None
+    assert "demoted" in lp.note
+
+
+def test_compile_plan_rejects_indivisible_batch():
+    specs = [ConvLayer("a", n=3, c=4, h=32, w=32, f=8, k=3, s=1)]
+    dists = {"a": Dist("sample", {"N": ("data", "model")})}
+    with pytest.raises(PlanError):
+        compile_plan(dists, specs, MS22)
+
+
+def test_plan_graph_covers_all_resnet_layers():
+    cfg = resnet.ResNetConfig(name="tiny", input_hw=32, n_classes=10,
+                              stages=(1, 1), widths=(8, 16))
+    g = resnet.resnet_graph(8, cfg)
+    specs = resnet.layer_specs(8, cfg)
+    plan = plan_graph(TPU_V5E, g, specs, MS22)
+    assert set(g.nodes) <= set(plan.layers)
+    assert plan.predicted is not None
+    txt = plan.describe()
+    for name in g.nodes:
+        assert name in txt
+
+
+def test_uniform_plan_answers_any_layer():
+    sh = ConvSharding(batch_axes=("data",), h_axis="model")
+    plan = NetworkPlan.uniform(sh)
+    assert plan.sharding("anything") == sh
+    assert plan.n_reshards == 0
+    strict = NetworkPlan.from_shardings(["a"], [sh])
+    with pytest.raises(PlanError):
+        strict.sharding("unknown")
+
+
+# ------------------------------------------------- execution equivalence --
+CFG = meshnet.MeshNetConfig("t", input_hw=32, in_channels=2,
+                            convs_per_block=1, widths=(4, 8))
+
+
+def _batch():
+    return {k: jnp.asarray(v) for k, v in
+            synthetic_mesh_batch(0, 4, 32, 2, out_hw=8).items()}
+
+
+def _loss_and_grads(plan, mesh):
+    params = meshnet.init(jax.random.PRNGKey(0), CFG)
+    f = jax.jit(lambda p, b: meshnet.loss_fn(p, b, CFG, plan, mesh))
+    g = jax.jit(jax.grad(lambda p, b: meshnet.loss_fn(p, b, CFG, plan,
+                                                      mesh)))
+    b = _batch()
+    return f(params, b), g(params, b)
+
+
+def test_uniform_plan_matches_legacy_sharding_bitwise():
+    """NetworkPlan.uniform(sh) reproduces the seed's single-ConvSharding
+    numerics bit for bit (backward compatibility contract)."""
+    l_ref, g_ref = _loss_and_grads(ConvSharding(), None)
+    plan = NetworkPlan.uniform(ConvSharding(),
+                               meshnet.layer_names(CFG))
+    l_got, g_got = _loss_and_grads(plan, None)
+    np.testing.assert_array_equal(np.asarray(l_got), np.asarray(l_ref))
+    for a, b in zip(jax.tree.leaves(g_got), jax.tree.leaves(g_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_auto_plan_1x1_mesh_matches_oracle_bitwise():
+    """A solved plan on a 1x1 mesh normalizes to the dense path and matches
+    the single-device oracle bit for bit."""
+    mesh = make_mesh(data=1, model=1)
+    specs = meshnet.layer_specs(CFG, 4)
+    plan = plan_line(TPU_V5E, specs, mesh)
+    for lp in plan.layers.values():     # size-1 axes all dropped
+        assert lp.sharding == ConvSharding()
+        assert not lp.reshard_in
+    l_ref, g_ref = _loss_and_grads(ConvSharding(), None)
+    l_got, g_got = _loss_and_grads(plan, mesh)
+    np.testing.assert_array_equal(np.asarray(l_got), np.asarray(l_ref))
+    for a, b in zip(jax.tree.leaves(g_got), jax.tree.leaves(g_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resnet_uniform_plan_matches_legacy_bitwise():
+    cfg = resnet.ResNetConfig(name="tiny", input_hw=32, n_classes=10,
+                              stages=(1, 1), widths=(4, 8))
+    params = resnet.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    ref = resnet.apply(params, x, cfg, ConvSharding())
+    plan = NetworkPlan.uniform(ConvSharding(),
+                               [l.name for l in resnet.layer_specs(2, cfg)])
+    got = resnet.apply(params, x, cfg, plan)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ------------------------------------------------------------ 4-device --
+@pytest.mark.slow
+def test_plan_distributed():
+    """Solved auto plan vs uniform plan vs single-device oracle on a 2x2
+    mesh (subprocess; numeric agreement for loss and grads)."""
+    run_dist_group("plan")

@@ -24,7 +24,7 @@ def test_end_to_end_train_checkpoint_resume():
                                 convs_per_block=1, widths=(4, 8))
     params = meshnet.init(jax.random.PRNGKey(0), cfg)
     loss = functools.partial(meshnet.loss_fn, cfg=cfg,
-                             shardings=ConvSharding())
+                             plan=ConvSharding())
     opt = sgd(0.05, momentum=0.9)
     ostate = opt.init(params)
 
@@ -60,21 +60,30 @@ def test_end_to_end_train_checkpoint_resume():
 
 
 def test_strategy_to_execution():
-    """§V-C output actually drives per-layer ConvShardings in the model."""
+    """§V-C output drives per-layer distributions in the model, through the
+    plan compiler (core.plan) and through the legacy per-layer list."""
+    from repro.core import plan as plan_lib
     cfg = meshnet.MeshNetConfig("t", input_hw=64, in_channels=4,
                                 convs_per_block=1, widths=(8, 16, 16))
     ms = {"data": 1, "model": 1}     # single device: all dists are trivial
     layers = meshnet.layer_specs(cfg, 4)
+    p = meshnet.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64, 4))
+
+    plan = plan_lib.plan_line(pm.LASSEN, layers, ms)
+    y = meshnet.apply(p, x, cfg, plan)
+    assert y.shape == (2, 8, 8, 1)
+    assert np.isfinite(np.asarray(y)).all()
+    assert plan.predicted is not None and plan.predicted["total"] > 0
+
+    # legacy path: a hand-lowered per-layer ConvSharding list still works
     cands = [strat.candidate_dists(l, ms) for l in layers]
     res = strat.solve_line(pm.LASSEN, layers, cands, ms)
     shardings = [ConvSharding(
         batch_axes=d.axes("N"), h_axis=(d.axes("H") or (None,))[0])
         for d in res.dists]
-    p = meshnet.init(jax.random.PRNGKey(0), cfg)
-    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64, 4))
-    y = meshnet.apply(p, x, cfg, shardings)
-    assert y.shape == (2, 8, 8, 1)
-    assert np.isfinite(np.asarray(y)).all()
+    y2 = meshnet.apply(p, x, cfg, shardings)
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(y))
 
 
 def test_train_step_builder_grad_accum_equivalence():
@@ -87,7 +96,7 @@ def test_train_step_builder_grad_accum_equivalence():
                                 convs_per_block=1, widths=(4,))
     params = meshnet.init(jax.random.PRNGKey(0), cfg)
     loss = functools.partial(meshnet.loss_fn, cfg=cfg,
-                             shardings=ConvSharding())
+                             plan=ConvSharding())
     opt = sgd(0.1, momentum=0.0)
 
     class _M:
