@@ -5,12 +5,19 @@ against the §V perf model — the validation loop the paper closes with
   PYTHONPATH=src python -m benchmarks.strategy_exec [ndevices]
 
 Runs on `ndevices` host CPU devices (default 4, set before jax import).
-For each CNN workload it times a jitted loss+grad step under
+Three workloads:
 
-  * the legacy uniform hybrid plan (one ConvSharding everywhere), and
-  * the §V-C solved auto plan (per-layer dists + reshard points),
+  * mesh128 — the strategy-choice workload from PR 1: uniform hybrid vs
+    the §V-C solved auto plan (per-layer dists + reshard points);
+  * mesh16cf — a small-spatial, channel-heavy meshnet where the solver
+    picks §III-D channel/filter layers: cross-checks the perf model's CF
+    cost terms (reduce-scatter fwd, all-gather BPw) against the
+    core.channel_conv runtime, and A/Bs auto-with-CF vs auto-no-CF;
+  * mesh2k_proxy — the 2K mesh-tangling geometry (5 convs/block) at
+    reduced resolution under the 2-D H x W spatial decomposition, the
+    ROADMAP item on exercising W-axis splits.
 
-and prints `name,us_per_call,derived` CSV rows carrying the perf-model
+Each prints `name,us_per_call,derived` CSV rows carrying the perf-model
 prediction from a host-calibrated Machine.  The absolute model/measured
 ratio calibrates the Machine constants; the *relative* ordering
 (auto <= uniform) is the optimizer's promise.
@@ -62,10 +69,49 @@ def _host_machine():
                    compute_efficiency=1.0)
 
 
+def _uniform_plan(plan_lib, sh, names, specs, mesh, machine):
+    """A uniform plan costed through the same §V-B model for comparability."""
+    uniform = plan_lib.NetworkPlan.uniform(sh, names)
+    return dataclasses.replace(
+        uniform, predicted=plan_lib.compile_plan(
+            {n: plan_lib._sharding_to_dist(sh) for n in names},
+            specs, mesh, machine=machine).predicted)
+
+
+def _bench_plans(workload, cfg, batch, specs, plans, mesh) -> None:
+    from repro.data.pipeline import synthetic_mesh_batch
+    from repro.models.cnn import meshnet
+    params = meshnet.init(jax.random.PRNGKey(0), cfg)
+    b = {k: jnp.asarray(v) for k, v in synthetic_mesh_batch(
+        0, batch, cfg.input_hw, cfg.in_channels,
+        out_hw=cfg.out_hw).items()}
+    for tag, plan in plans:
+        def put(v):
+            first = specs[0]
+            spec = plan.input_spec(first.name, first.h, first.w,
+                                   first.k, first.s, mesh)
+            return jax.device_put(v, NamedSharding(mesh, spec))
+
+        lbl_spec = P("data") if batch % dict(mesh.shape)["data"] == 0 \
+            else P(None)
+        bb = {"image": put(b["image"]),
+              "label": jax.device_put(b["label"],
+                                      NamedSharding(mesh, lbl_spec))}
+        with mesh:
+            step = jax.jit(jax.value_and_grad(
+                lambda p, x: meshnet.loss_fn(p, x, cfg, plan, mesh)))
+            dt = _time_step(lambda p, x: step(p, x), params, bb)
+        pred = plan.predicted["total"] if plan.predicted else float("nan")
+        print(f"strategy_exec/{workload}/{tag},{dt*1e6:.1f},"
+              f"predicted_us={pred*1e6:.1f} "
+              f"model_measured_ratio={pred/dt:.3f} "
+              f"reshards={plan.n_reshards}")
+
+
 def run() -> None:
     from repro.core import plan as plan_lib
+    from repro.core.channel_conv import CFSharding
     from repro.core.spatial_conv import ConvSharding
-    from repro.data.pipeline import synthetic_mesh_batch
     from repro.launch.mesh import make_mesh
     from repro.models.cnn import meshnet
 
@@ -74,48 +120,55 @@ def run() -> None:
     model = max(1, ndev // data)
     mesh = make_mesh(data=data, model=model)
     machine = _host_machine()
+    uni_sh = ConvSharding(batch_axes=("data",), h_axis="model")
 
-    # a meshnet whose geometry makes the strategy choice non-trivial on
-    # this mesh (batch 2 < device count: pure sample parallelism invalid)
+    # --- mesh128: the strategy choice is non-trivial on this mesh ---------
+    # (batch 2 < device count: pure sample parallelism invalid)
     cfg = meshnet.MeshNetConfig("bench", input_hw=128, in_channels=8,
                                 convs_per_block=2, widths=(16, 32, 32),
                                 bn_scope="global")
-    batch = 2
-    specs = meshnet.layer_specs(cfg, batch)
-    params = meshnet.init(jax.random.PRNGKey(0), cfg)
-    b = {k: jnp.asarray(v) for k, v in synthetic_mesh_batch(
-        0, batch, cfg.input_hw, cfg.in_channels,
-        out_hw=cfg.out_hw).items()}
-
-    uni_sh = ConvSharding(batch_axes=("data",), h_axis="model")
+    specs = meshnet.layer_specs(cfg, 2)
     names = meshnet.layer_names(cfg)
-    uniform = plan_lib.NetworkPlan.uniform(uni_sh, names)
-    # cost the uniform plan through the same §V-B model for comparability
-    uniform = dataclasses.replace(
-        uniform, predicted=plan_lib.compile_plan(
-            {n: plan_lib._sharding_to_dist(uni_sh) for n in names},
-            specs, mesh, machine=machine).predicted)
-    auto = plan_lib.plan_line(machine, specs, mesh)
+    _bench_plans("mesh128", cfg, 2, specs, (
+        ("uniform", _uniform_plan(plan_lib, uni_sh, names, specs, mesh,
+                                  machine)),
+        ("auto", plan_lib.plan_line(machine, specs, mesh))), mesh)
 
-    for tag, plan in (("uniform", uniform), ("auto", auto)):
-        def put(v):
-            first = specs[0]
-            spec = plan.input_spec(first.name, first.h, first.w,
-                                   first.k, first.s, mesh)
-            return jax.device_put(v, NamedSharding(mesh, spec))
+    # --- mesh16cf: late layers too small to split spatially (h=4 < k) but
+    # channel-heavy — the §III-D sweet spot.  The auto plan should contain
+    # CF layers; its model_measured_ratio cross-checks the CF cost terms
+    # against the core.channel_conv runtime. -----------------------------
+    cfg = meshnet.MeshNetConfig("bench16", input_hw=16, in_channels=8,
+                                convs_per_block=1, widths=(32, 64, 64),
+                                bn_scope="global")
+    specs = meshnet.layer_specs(cfg, 2)
+    names = meshnet.layer_names(cfg)
+    auto_cf = plan_lib.plan_line(machine, specs, mesh)
+    n_cf = sum(isinstance(lp.sharding, CFSharding)
+               for lp in auto_cf.layers.values())
+    print(f"# mesh16cf auto plan: {n_cf} CF layers")
+    _bench_plans("mesh16cf", cfg, 2, specs, (
+        ("uniform", _uniform_plan(plan_lib, uni_sh, names, specs, mesh,
+                                  machine)),
+        ("auto_cf", auto_cf),
+        ("auto_nocf", plan_lib.plan_line(machine, specs, mesh,
+                                         allow_channel_filter=False))),
+        mesh)
 
-        bb = {"image": put(b["image"]),
-              "label": jax.device_put(b["label"],
-                                      NamedSharding(mesh, P("data")))}
-        with mesh:
-            step = jax.jit(jax.value_and_grad(
-                lambda p, x: meshnet.loss_fn(p, x, cfg, plan, mesh)))
-            dt = _time_step(lambda p, x: step(p, x), params, bb)
-        pred = plan.predicted["total"] if plan.predicted else float("nan")
-        print(f"strategy_exec/mesh128/{tag},{dt*1e6:.1f},"
-              f"predicted_us={pred*1e6:.1f} "
-              f"model_measured_ratio={pred/dt:.3f} "
-              f"reshards={plan.n_reshards}")
+    # --- mesh2k_proxy: the 2K model's depth (5 convs/block) at reduced
+    # resolution, under the 2-D H x W decomposition (W on the data axis,
+    # H on the model axis; batch 1 — the paper's memory-bound regime). ----
+    if data > 1:
+        cfg = meshnet.MeshNetConfig("bench2k", input_hw=64, in_channels=8,
+                                    convs_per_block=5, widths=(16, 32),
+                                    bn_scope="global")
+        specs = meshnet.layer_specs(cfg, 1)
+        names = meshnet.layer_names(cfg)
+        hw_sh = ConvSharding(batch_axes=(), h_axis="model", w_axis="data")
+        _bench_plans("mesh2k_proxy", cfg, 1, specs, (
+            ("hxw", _uniform_plan(plan_lib, hw_sh, names, specs, mesh,
+                                  machine)),
+            ("auto", plan_lib.plan_line(machine, specs, mesh))), mesh)
 
 
 if __name__ == "__main__":

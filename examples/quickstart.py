@@ -3,9 +3,11 @@ minute on CPU devices.
 
 1. Build the (reduced) mesh-tangling model.
 2. Run the strategy optimizer (paper §V-C) on its layer line for this
-   mesh, and ALSO show what it would pick on a hypothetical 2x2 mesh.
+   mesh, and ALSO show what it would pick on a hypothetical 2x2 mesh —
+   including a hand-mixed spatial + channel/filter (§III-D) plan with
+   explicit reshard points at the transitions.
 3. Compile the solved strategy into an executable NetworkPlan (per-layer
-   ConvShardings + §III-C reshard points, core.plan) and train a few steps
+   shardings + §III-C reshard points, core.plan) and train a few steps
    WITH that plan; checkpoint and resume.
 
   PYTHONPATH=src python examples/quickstart.py
@@ -38,6 +40,21 @@ layers = meshnet.layer_specs(cfg, n=BATCH)
 hypo = plan_lib.plan_line(machine, layers, {"data": 2, "model": 2})
 print("\nsolved plan for a hypothetical 2x2 mesh (paper §V-C):")
 print(hypo.describe())
+
+# --- mixed spatial + channel/filter plan (§III-D) ------------------------
+# The early layer keeps the hybrid sample x spatial decomposition (large
+# H, few channels); the later layers switch to channel/filter parallelism
+# (small H, many channels) — core.channel_conv's row-parallel conv.  Each
+# transition compiles to one §III-C reshard point.
+from repro.core.distribution import Dist, channel_filter, hybrid
+mixed = plan_lib.compile_plan(
+    {"conv1_1": hybrid(),                 # N on data, H on model
+     "conv2_1": channel_filter(),         # N on data, C&F on model
+     "conv3_1": channel_filter(),         # chains with zero resharding
+     "pred": Dist("sample", {"N": ("data", "model")})},
+    layers, {"data": 2, "model": 2}, machine=machine)
+print("\nhand-mixed spatial + CF plan on the same 2x2 mesh:")
+print(mixed.describe())
 
 # --- solve + compile for THIS machine's devices, then execute it ---------
 mesh = make_mesh(data=1, model=jax.device_count())

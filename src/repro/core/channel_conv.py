@@ -1,0 +1,252 @@
+"""Channel/filter-parallel convolution (paper §III-D) — the runtime.
+
+The paper sketches partitioning the *hidden* dimensions of a conv layer: the
+C input channels and the F filters (output channels).  This module makes
+those distributions executable, as the convolution analogue of Megatron's
+row/column-parallel linear layers:
+
+  'channel' (row-parallel, the scheme the §V perf model costs):
+      x enters C-sharded; each processor holds the C-rows of w for its
+      channel block and convolves them against *all* F filters, producing a
+      full-F partial sum; a reduce-scatter over the CF mesh axis completes
+      the channel sum (Eq. 1's sum over c) and leaves y F-sharded.  The VJP
+      of the reduce-scatter is the all-gather that hands backprop the full-F
+      dL/dy it needs for the filter-gradient contraction (§III-D's
+      allreduce, in its reduce-scatter/all-gather factorization).
+
+  'filter' (column-parallel):
+      x is all-gathered over the CF axis to full C; each processor convolves
+      against its F-block of w, so y comes out F-sharded with no output
+      collective.  Backprop reverses the all-gather into a psum on dL/dx.
+
+Both modes consume C-sharded input and produce F-sharded output under the
+*same* PartitionSpec, so consecutive CF layers chain with zero resharding —
+layer i's F-shard IS layer i+1's C-shard — and a §III-C shuffle appears
+exactly when the plan transitions between CF and sample/spatial layers.
+
+Weights stay *globally* addressed (replicated into the shard_map, sliced
+per-shard with `axis_index`): parameter trees, checkpoints and the FSDP
+at-rest sharding are untouched, and autodiff reconstitutes the full dL/dw
+through the slice-VJP + shard_map psum, which is the §V-A allreduce over the
+processors sharing each (C, F) block.
+
+BN under a CF distribution is embarrassingly parallel over channels (the
+statistics are per-channel), so `cf_batch_norm` needs *zero* communication
+at 'local'/'spatial' scope and a batch-axes-only psum at 'global' scope —
+one of the paper's arguments for channel decompositions of late layers.
+
+All functions replicate single-device convolution exactly (up to float
+accumulation order), like their spatial counterparts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.spatial_conv import _conv_nhwc
+from repro.utils import same_pads, shard_map
+
+MODES = ("channel", "filter")
+
+
+@dataclasses.dataclass(frozen=True)
+class CFSharding:
+    """Distribution descriptor for a channel/filter-parallel conv layer.
+
+    batch_axes: mesh axes sharding N (sample parallelism), as ConvSharding.
+    cf_axis:    the mesh axis partitioning C of the input and F of the
+                output (one axis — the §III-D group).
+    mode:       'channel' (row-parallel, reduce-scatter on y — the perf
+                model's costing) or 'filter' (column-parallel, all-gather
+                on x).
+    """
+    batch_axes: tuple[str, ...] = ()
+    cf_axis: str | None = None
+    mode: str = "channel"
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"CFSharding mode {self.mode!r} not in {MODES}")
+
+    # duck-type the ConvSharding surface the models/plan query ------------
+    @property
+    def is_spatial(self) -> bool:
+        return False
+
+    @property
+    def h_axis(self):
+        return None
+
+    @property
+    def w_axis(self):
+        return None
+
+    def x_spec(self) -> P:
+        """NHWC placement: channels on the CF axis, N on the batch axes."""
+        return P(self.batch_axes or None, None, None, self.cf_axis)
+
+    def fit(self, h: int, w: int, k: int, s: int, mesh) -> "CFSharding":
+        """Spatial-geometry fit is a no-op for CF layers (nothing spatial is
+        sharded); channel divisibility is validated at plan-compile time
+        (core.plan demotes non-divisible layers and records it)."""
+        return self
+
+    def fits_channels(self, c: int, f: int, mesh_shape) -> bool:
+        if self.cf_axis is None:
+            return True
+        ways = dict(mesh_shape).get(self.cf_axis, 1)
+        return c % ways == 0 and f % ways == 0
+
+
+def _resolve_mesh(mesh):
+    """The ambient abstract mesh, on jax versions that track one."""
+    if mesh is not None:
+        return mesh
+    gam = getattr(jax.sharding, "get_abstract_mesh", None)
+    return gam() if gam is not None else None
+
+
+def _slice_block(v, axis_name: str, n_blocks: int, dim: int):
+    """This shard's block of a replicated array, along `dim`."""
+    size = v.shape[dim] // n_blocks
+    return lax.dynamic_slice_in_dim(v, lax.axis_index(axis_name) * size,
+                                    size, axis=dim)
+
+
+def _local_cf_conv(x, w, *, strides, sharding: CFSharding, mesh_shape,
+                   backend: str = "xla"):
+    """Shard-local CF conv (runs inside shard_map).
+
+    x: this shard's (n_local, H, W, C/p) channel block.
+    w: the full (K, K, C, F) weights (replicated into the shard_map).
+    """
+    ax = sharding.cf_axis
+    p = mesh_shape[ax]
+    k_h, k_w = w.shape[0], w.shape[1]
+    pads = (same_pads(k_h, strides[0]), same_pads(k_w, strides[1]))
+
+    if sharding.mode == "filter":
+        # column-parallel: restore full C, convolve my F-block. y needs no
+        # collective; the all-gather's VJP is the psum completing dL/dx.
+        xg = lax.all_gather(x, ax, axis=3, tiled=True)
+        wp = _slice_block(w, ax, p, dim=3)
+        return _conv_nhwc(xg, wp, strides, pads, backend)
+
+    # row-parallel: my C-rows of w against all F filters, then the
+    # reduce-scatter that completes the channel sum and leaves y F-sharded.
+    wp = _slice_block(w, ax, p, dim=2)
+    partial = _conv_nhwc(x, wp, strides, pads, backend)
+    return lax.psum_scatter(partial, ax, scatter_dimension=3, tiled=True)
+
+
+def cf_conv2d(x, w, *, strides=(1, 1), sharding: CFSharding, mesh=None,
+              overlap: bool = True, backend: str = "xla"):
+    """'SAME'-padded strided conv2d under channel/filter parallelism.
+
+    x: (N, H, W, C) global array, C sharded on `sharding.cf_axis` (and N on
+       the batch axes) under jit.
+    w: (K_h, K_w, C, F) weights, globally addressed (replicated into the
+       shard, sliced per-processor — FSDP owns the at-rest layout).
+    overlap: accepted for API symmetry with spatial_conv2d; the CF
+       collectives are exposed to XLA's latency-hiding scheduler as
+       ordinary dataflow, no manual interior/boundary split is needed.
+    backend: 'xla' or 'pallas' — the local conv kernel (see _conv_nhwc).
+    """
+    if x.dtype != w.dtype:      # mixed-precision policy: compute in w's dtype
+        x = x.astype(w.dtype)
+    mesh = _resolve_mesh(mesh)
+    mesh_shape = dict(mesh.shape) if mesh is not None else {}
+    p = mesh_shape.get(sharding.cf_axis, 1) if sharding.cf_axis else 1
+    k_h, k_w = w.shape[0], w.shape[1]
+    if p <= 1:
+        # dense fallback — the 1x1-mesh oracle path, bitwise-identical.
+        return _conv_nhwc(x, w, strides,
+                          (same_pads(k_h, strides[0]),
+                           same_pads(k_w, strides[1])), backend)
+    c, f = w.shape[2], w.shape[3]
+    assert c % p == 0 and f % p == 0, (
+        f"channels C={c}, F={f} not divisible by {p}-way CF axis "
+        f"{sharding.cf_axis!r} — core.plan demotes such layers at compile "
+        "time; direct callers must pre-check CFSharding.fits_channels")
+    fn = functools.partial(_local_cf_conv, strides=strides,
+                           sharding=sharding, mesh_shape=mesh_shape,
+                           backend=backend)
+    spec = sharding.x_spec()
+    # legacy replication tracking has no rule for pallas_call, so the
+    # Pallas local-conv CF path drops it (forward-verified; take gradients
+    # through the XLA backend on legacy jax — see utils.shard_map).
+    lcr = False if backend == "pallas" else None
+    return shard_map(fn, mesh=mesh, in_specs=(spec, P()),
+                     out_specs=spec, legacy_check_rep=lcr)(x, w)
+
+
+def cf_bias_add(x, b, *, sharding: CFSharding, mesh=None):
+    """Add a per-channel bias to a C-sharded NHWC tensor (b stays global)."""
+    mesh = _resolve_mesh(mesh)
+    mesh_shape = dict(mesh.shape) if mesh is not None else {}
+    p = mesh_shape.get(sharding.cf_axis, 1) if sharding.cf_axis else 1
+    if p <= 1:
+        return x + b
+    spec = sharding.x_spec()
+
+    def fn(x, b):
+        return x + _slice_block(b, sharding.cf_axis, p, dim=0)
+
+    return shard_map(fn, mesh=mesh, in_specs=(spec, P()),
+                     out_specs=spec)(x, b)
+
+
+def cf_batch_norm(x, gamma, beta, *, sharding: CFSharding, mesh=None,
+                  scope: str = "local", eps: float = 1e-5):
+    """BN over (N, H, W) of a C-sharded NHWC tensor.
+
+    Per-channel statistics never cross the CF axis (each channel lives on
+    exactly one shard), so 'local' and 'spatial' scopes are communication-
+    free; 'global' psums the moments over the batch axes only.  gamma/beta
+    stay globally addressed, sliced per shard like the conv weights.
+    """
+    if scope not in ("local", "spatial", "global"):
+        raise ValueError(f"unknown BN scope {scope!r}")
+    mesh = _resolve_mesh(mesh)
+    mesh_shape = dict(mesh.shape) if mesh is not None else {}
+    p = mesh_shape.get(sharding.cf_axis, 1) if sharding.cf_axis else 1
+    comm_axes = tuple(a for a in (sharding.batch_axes or ())
+                      if scope == "global" and mesh_shape.get(a, 1) > 1)
+    if p <= 1 and not comm_axes:
+        # dense fallback, formulated exactly like core.spatial_norm's local
+        # path so the 1x1-mesh numerics are bitwise-identical
+        xf = x.astype(jnp.float32)
+        n = x.shape[0] * x.shape[1] * x.shape[2]
+        mean = jnp.sum(xf, (0, 1, 2)) / n
+        var = jnp.sum(jnp.square(xf), (0, 1, 2)) / n - jnp.square(mean)
+        inv = lax.rsqrt(var + eps)
+        y = (x - mean.astype(x.dtype)) * inv.astype(x.dtype)
+        return y * gamma + beta
+
+    def fn(x, g, b):
+        xf = x.astype(jnp.float32)
+        s = jnp.sum(xf, (0, 1, 2))
+        ss = jnp.sum(jnp.square(xf), (0, 1, 2))
+        n = x.shape[0] * x.shape[1] * x.shape[2]
+        if comm_axes:
+            s = lax.psum(s, comm_axes)
+            ss = lax.psum(ss, comm_axes)
+            for a in comm_axes:
+                n *= mesh_shape[a]
+        mean = s / n
+        var = ss / n - jnp.square(mean)
+        inv = lax.rsqrt(var + eps)
+        y = (x - mean.astype(x.dtype)) * inv.astype(x.dtype)
+        if p > 1:
+            g = _slice_block(g, sharding.cf_axis, p, dim=0)
+            b = _slice_block(b, sharding.cf_axis, p, dim=0)
+        return y * g + b
+
+    spec = sharding.x_spec()
+    return shard_map(fn, mesh=mesh, in_specs=(spec, P(), P()),
+                     out_specs=spec)(x, gamma, beta)

@@ -232,6 +232,9 @@ def layer_cost(m: Machine, layer: ConvLayer, dist: Dist,
     # block against full-F weight rows, and a reduce-scatter over the group
     # completes the channel sum leaving y F-sharded (the conv analogue of
     # Megatron row-parallel): compute sees (c_l, full f), comm is RS(y).
+    # This is exactly what core.channel_conv's 'channel' mode executes
+    # (benchmarks/strategy_exec.py cross-checks these terms against its
+    # measured step times); its 'filter' mode trades the RS(y) for AG(x).
     p_c = dist.ways("C", mesh_shape)
     p_f = dist.ways("F", mesh_shape)
     h_out_l = layer.h_out // max(dist.ways("H", mesh_shape), 1)

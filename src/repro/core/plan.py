@@ -4,16 +4,22 @@
 with a `{layer name: Dist}` map — a *mathematical* object.  This module
 lowers that map into a `NetworkPlan` the models execute:
 
-  * each layer's `Dist` becomes the runtime `ConvSharding` that drives the
-    halo-exchange conv/pool/BN implementations (core.spatial_conv);
+  * each layer's `Dist` becomes the runtime sharding descriptor that drives
+    execution: a `ConvSharding` for sample/spatial distributions (the
+    halo-exchange conv/pool/BN implementations, core.spatial_conv) or a
+    `CFSharding` for channel/filter distributions (§III-D — the
+    row/column-parallel conv in core.channel_conv, the paper's "hidden
+    dimension" parallelism for late, channel-heavy layers whose spatial
+    extents are too small to split);
   * a distribution change between consecutive layers becomes an explicit
     reshard point — the paper's Shuffle(D_i, D_j) (§III-C) — lowered to
     ``lax.with_sharding_constraint`` so GSPMD materializes the all-to-all
     exactly where the optimizer paid for it;
   * every layer is validated against its geometry (the `ConvSharding.fit`
     edge cases, §III-A): a distribution the runtime would demote (spatial
-    shard smaller than the kernel, non-divisible extents) is demoted at
-    *compile* time and recorded, so the perf-model prediction stays honest;
+    shard smaller than the kernel, non-divisible extents, channel counts
+    that do not divide the CF mesh axis) is demoted at *compile* time and
+    recorded, so the perf-model prediction stays honest;
   * mesh axes of size 1 are dropped (they provide no parallelism), which
     makes a plan solved on a 1x1 mesh execute the exact single-device code
     path — the oracle-equivalence contract the tests pin down;
@@ -24,6 +30,12 @@ lowers that map into a `NetworkPlan` the models execute:
 A `NetworkPlan` built with `NetworkPlan.uniform(conv_sharding)` reproduces
 the legacy one-`ConvSharding`-for-every-layer behavior bit for bit, which is
 how existing callers keep working.
+
+Mixed plans compose freely: a solved network can open with hybrid
+sample+spatial layers, switch late layers to channel/filter parallelism
+when the solver prices the halo above the reduce-scatter, and close with a
+sample-parallel head — each transition is one recorded reshard point.
+`examples/quickstart.py` demos such a mixed spatial+CF plan end to end.
 """
 from __future__ import annotations
 
@@ -35,6 +47,7 @@ import jax
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.channel_conv import CFSharding
 from repro.core.distribution import Dist
 from repro.core.perfmodel import (ConvLayer, EmpiricalTable, Machine,
                                   network_cost)
@@ -43,7 +56,10 @@ from repro.core.strategy import candidate_dists, solve_dag, solve_line
 
 
 class PlanError(ValueError):
-    """A distribution map cannot be lowered to an executable plan."""
+    """A distribution map cannot be lowered to an executable plan.
+
+    Messages name the offending layer (when known) and dist, and suggest
+    the nearest executable demotion so callers can fix their map."""
 
 
 # ---------------------------------------------------------------------------
@@ -59,27 +75,66 @@ def normalize_dist(d: Dist, mesh_shape: Mapping[str, int]) -> Dist:
     return Dist(d.name, dims)
 
 
-def dist_to_sharding(d: Dist, mesh_shape: Mapping[str, int]) -> ConvSharding:
-    """Lower a Dist to the runtime ConvSharding, or raise PlanError.
+def _demoted(d: Dist, keep: set[str]) -> Dist:
+    """The nearest executable demotion: `d` restricted to dims in `keep`."""
+    return Dist(d.name + "-demoted",
+                {k: v for k, v in d.dims.items() if k in keep})
 
-    The runtime executes sample (N) and spatial (H and/or W, one mesh axis
-    each) parallelism; channel/filter distributions (§III-D) are perf-model
-    candidates only until a runtime lowering exists.
+
+def _dist_str(d: Dist) -> str:
+    dims = " ".join(f"{k}:{','.join(v)}" for k, v in d.dims.items())
+    return f"{d.name!r} ({dims or 'replicated'})"
+
+
+def dist_to_sharding(d: Dist, mesh_shape: Mapping[str, int],
+                     layer: str | None = None):
+    """Lower a Dist to its runtime sharding descriptor, or raise PlanError.
+
+    Sample (N) and spatial (H and/or W, one mesh axis each) distributions
+    lower to `ConvSharding`; channel/filter distributions (§III-D, C and F
+    paired on one mesh axis) lower to `CFSharding` (core.channel_conv).
+    `layer` (when known) names the offending layer in diagnostics.
     """
     d = normalize_dist(d, mesh_shape)
-    for dim in ("C", "F"):
-        if d.axes(dim):
+    who = f"layer {layer!r}: " if layer else ""
+    c_ax, f_ax = d.axes("C"), d.axes("F")
+    if c_ax or f_ax:
+        if d.axes("H") or d.axes("W"):
             raise PlanError(
-                f"dist {d.name!r} shards {dim} — channel/filter parallelism "
-                "has no runtime lowering yet (perf-model only)")
+                f"{who}dist {_dist_str(d)} combines channel/filter with "
+                "spatial sharding — the CF runtime (core.channel_conv) "
+                "keeps H and W whole; nearest executable demotion: "
+                f"{_dist_str(_demoted(d, {'N', 'C', 'F'}))}")
+        if c_ax != f_ax:
+            raise PlanError(
+                f"{who}dist {_dist_str(d)} shards C over {c_ax} but F over "
+                f"{f_ax} — the CF runtime pairs C and F on the same mesh "
+                "axis (layer i's F-shard is layer i+1's C-shard); nearest "
+                "executable demotion: "
+                f"{_dist_str(_demoted(d, {'N'}))}")
+        if len(c_ax) > 1:
+            raise PlanError(
+                f"{who}dist {_dist_str(d)} shards C/F over {c_ax} — the CF "
+                "runtime supports one mesh axis per group; nearest "
+                "executable demotion: "
+                f"{_dist_str(_demoted(d, {'N'}))}")
+        unknown = set(d.dims) - {"N", "C", "F"}
+        if unknown:
+            raise PlanError(f"{who}dist {_dist_str(d)} shards non-CNN dims "
+                            f"{unknown}")
+        return CFSharding(batch_axes=d.axes("N"), cf_axis=c_ax[0])
     for dim in ("H", "W"):
         if len(d.axes(dim)) > 1:
             raise PlanError(
-                f"dist {d.name!r} shards {dim} over {d.axes(dim)} — the "
-                "runtime supports one mesh axis per spatial dim")
+                f"{who}dist {_dist_str(d)} shards {dim} over {d.axes(dim)} "
+                "— the runtime supports one mesh axis per spatial dim; "
+                "nearest executable demotion: "
+                f"{_dist_str(Dist(d.name + '-demoted', {**dict(d.dims), dim: d.axes(dim)[:1]}))}")
     unknown = set(d.dims) - {"N", "H", "W"}
     if unknown:
-        raise PlanError(f"dist {d.name!r} shards non-CNN dims {unknown}")
+        raise PlanError(f"{who}dist {_dist_str(d)} shards non-CNN dims "
+                        f"{unknown}; nearest executable demotion: "
+                        f"{_dist_str(_demoted(d, {'N', 'H', 'W'}))}")
     h, w = d.axes("H"), d.axes("W")
     return ConvSharding(batch_axes=d.axes("N"),
                         h_axis=h[0] if h else None,
@@ -95,23 +150,33 @@ def is_executable(d: Dist, mesh_shape: Mapping[str, int]) -> bool:
 
 
 def executable_candidates(layer: ConvLayer, mesh_shape: Mapping[str, int],
-                          allow_w_split: bool = True) -> list[Dist]:
+                          allow_w_split: bool = True,
+                          allow_channel_filter: bool = True) -> list[Dist]:
     """The §V-C candidate set restricted to runtime-executable dists.
 
-    Never empty: a fully replicated layer is always executable (the solver
-    then pays pure redundancy for it, which correctly prices it out whenever
-    any parallel candidate exists).
+    Channel/filter candidates (§III-D) are included by default now that
+    core.channel_conv executes them; the C/F+spatial combinations the CF
+    runtime rejects are filtered out here, so the solver only ever sees
+    what it can run.  Never empty: a fully replicated layer is always
+    executable (the solver then pays pure redundancy for it, which
+    correctly prices it out whenever any parallel candidate exists).
     """
-    out = [d for d in candidate_dists(layer, mesh_shape,
-                                      allow_w_split=allow_w_split)
+    out = [d for d in candidate_dists(
+               layer, mesh_shape,
+               allow_channel_filter=allow_channel_filter,
+               allow_w_split=allow_w_split)
            if is_executable(d, mesh_shape)]
     return out or [Dist("replicated", {})]
 
 
-def _sharding_to_dist(sh: ConvSharding, name: str = "uniform") -> Dist:
+def _sharding_to_dist(sh, name: str = "uniform") -> Dist:
     dims: dict[str, tuple[str, ...]] = {}
     if sh.batch_axes:
         dims["N"] = tuple(sh.batch_axes)
+    if isinstance(sh, CFSharding):
+        if sh.cf_axis:
+            dims["C"] = dims["F"] = (sh.cf_axis,)
+        return Dist(name, dims)
     if sh.h_axis:
         dims["H"] = (sh.h_axis,)
     if sh.w_axis:
@@ -126,7 +191,7 @@ def _sharding_to_dist(sh: ConvSharding, name: str = "uniform") -> Dist:
 @dataclasses.dataclass(frozen=True)
 class LayerPlan:
     name: str
-    sharding: ConvSharding
+    sharding: "ConvSharding | CFSharding"
     dist: Dist | None = None      # the solved Dist (None for legacy lists)
     reshard_in: bool = False      # §III-C shuffle on this layer's input
     note: str = ""                # e.g. geometry demotion record
@@ -171,12 +236,12 @@ class NetworkPlan:
             return obj
         if obj is None:
             return cls.uniform(ConvSharding())
-        if isinstance(obj, ConvSharding):
+        if isinstance(obj, (ConvSharding, CFSharding)):
             return cls.uniform(obj)
         raise TypeError(f"cannot build a NetworkPlan from {type(obj)}")
 
     # -- queries ------------------------------------------------------------
-    def sharding(self, name: str) -> ConvSharding:
+    def sharding(self, name: str) -> "ConvSharding | CFSharding":
         lp = self.layers.get(name)
         if lp is not None:
             return lp.sharding
@@ -215,10 +280,14 @@ class NetworkPlan:
             parts = []
             if sh.batch_axes:
                 parts.append(f"N:{','.join(sh.batch_axes)}")
-            if sh.h_axis:
-                parts.append(f"H:{sh.h_axis}")
-            if sh.w_axis:
-                parts.append(f"W:{sh.w_axis}")
+            if isinstance(sh, CFSharding):
+                if sh.cf_axis:
+                    parts.append(f"CF:{sh.cf_axis}({sh.mode})")
+            else:
+                if sh.h_axis:
+                    parts.append(f"H:{sh.h_axis}")
+                if sh.w_axis:
+                    parts.append(f"W:{sh.w_axis}")
             lay = " ".join(parts) or "replicated"
             note = f"   [{lp.note}]" if lp.note else ""
             rows.append(f"  {lp.name:20s} {tag}{lay}{note}")
@@ -281,22 +350,35 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
         if spec.name not in dists:
             raise PlanError(f"no solved dist for layer {spec.name!r}")
         d = normalize_dist(dists[spec.name], mesh_shape)
-        sh = dist_to_sharding(d, mesh_shape)
+        sh = dist_to_sharding(d, mesh_shape, layer=spec.name)
         n_ways = d.ways("N", mesh_shape)
         if spec.n % n_ways:
-            raise PlanError(f"{spec.name}: N={spec.n} not divisible by "
-                            f"{n_ways}-way {d.name!r}")
+            raise PlanError(
+                f"layer {spec.name!r}: N={spec.n} not divisible by "
+                f"{n_ways}-way {_dist_str(d)}; nearest executable "
+                f"demotion: {_dist_str(_demoted(d, set(d.dims) - {'N'}))}")
         note = ""
-        fitted = sh.fit(spec.h, spec.w, spec.k, spec.s, gm) if gm else sh
-        if fitted != sh:
-            # the ConvSharding.fit edge case (§III-A): record the demotion
-            # so the executed plan and the costed plan stay identical.
-            dropped = [ax for ax in ("h_axis", "w_axis")
-                       if getattr(sh, ax) and not getattr(fitted, ax)]
-            note = (f"demoted {'/'.join(dropped)}: "
-                    f"{spec.h}x{spec.w} shard vs k={spec.k},s={spec.s}")
-            sh = fitted
-            d = _sharding_to_dist(sh, d.name + "-demoted")
+        if isinstance(sh, CFSharding):
+            if not sh.fits_channels(spec.c, spec.f, mesh_shape):
+                # the CF edge case: channel counts must divide the mesh
+                # axis; demote to the sample-parallel remainder at compile
+                # time and record it so the cost report stays honest.
+                ways = mesh_shape.get(sh.cf_axis, 1)
+                note = (f"demoted C/F: {spec.c}->{spec.f} channels vs "
+                        f"{ways}-way {sh.cf_axis}")
+                d = _demoted(d, {"N"})
+                sh = dist_to_sharding(d, mesh_shape, layer=spec.name)
+        else:
+            fitted = sh.fit(spec.h, spec.w, spec.k, spec.s, gm) if gm else sh
+            if fitted != sh:
+                # the ConvSharding.fit edge case (§III-A): record the
+                # demotion so the executed and costed plans stay identical.
+                dropped = [ax for ax in ("h_axis", "w_axis")
+                           if getattr(sh, ax) and not getattr(fitted, ax)]
+                note = (f"demoted {'/'.join(dropped)}: "
+                        f"{spec.h}x{spec.w} shard vs k={spec.k},s={spec.s}")
+                sh = fitted
+                d = _sharding_to_dist(sh, d.name + "-demoted")
         if graph is not None:
             preds = [final[p] for p in graph.predecessors(spec.name)
                      if p in final]
@@ -322,11 +404,14 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
 
 def plan_line(machine: Machine, specs: Sequence[ConvLayer], mesh, *,
               table: EmpiricalTable | None = None, overlap: bool = True,
-              allow_w_split: bool = True) -> NetworkPlan:
+              allow_w_split: bool = True,
+              allow_channel_filter: bool = True) -> NetworkPlan:
     """Line networks (meshnet): §V-C shortest path over executable
-    candidates, compiled to a NetworkPlan."""
+    candidates (sample, spatial and channel/filter), compiled to a
+    NetworkPlan."""
     mesh_shape = _mesh_shape(mesh)
-    cands = [executable_candidates(l, mesh_shape, allow_w_split)
+    cands = [executable_candidates(l, mesh_shape, allow_w_split,
+                                   allow_channel_filter)
              for l in specs]
     res = solve_line(machine, specs, cands, mesh_shape, table, overlap)
     return compile_plan(res.dists, specs, mesh, machine=machine,
@@ -336,7 +421,8 @@ def plan_line(machine: Machine, specs: Sequence[ConvLayer], mesh, *,
 def plan_graph(machine: Machine, graph, specs: Sequence[ConvLayer], mesh, *,
                table: EmpiricalTable | None = None,
                overlap: bool = True,
-               allow_w_split: bool = True) -> NetworkPlan:
+               allow_w_split: bool = True,
+               allow_channel_filter: bool = True) -> NetworkPlan:
     """Branchy networks (ResNet): §V-C longest-path-first over the DAG.
 
     `specs` fixes the execution/validation order and may be a subset of the
@@ -346,7 +432,8 @@ def plan_graph(machine: Machine, graph, specs: Sequence[ConvLayer], mesh, *,
     mesh_shape = _mesh_shape(mesh)
     dists = solve_dag(machine, graph, mesh_shape, table, overlap,
                       candidate_fn=lambda l: executable_candidates(
-                          l, mesh_shape, allow_w_split))
+                          l, mesh_shape, allow_w_split,
+                          allow_channel_filter))
     names = [l.name for l in specs]
     extra = [n for n in graph.nodes if n not in set(names)]
     all_specs = list(specs) + [graph.nodes[n]["layer"] for n in extra]

@@ -10,6 +10,9 @@ mesh2k/resnet50 --smoke` trains the paper's CNN workloads under hybrid
 sample x spatial parallelism; add `--strategy auto` to run the paper's §V-C
 strategy optimizer at startup and execute its per-layer distribution plan
 (with automatic inter-layer resharding) instead of the uniform default.
+The solved plan may mix sample, spatial and channel/filter (§III-D) layers
+— CF layers execute via core.channel_conv (row-parallel conv); pass
+--no-cf to restrict the search to sample/spatial for A/B comparison.
 """
 from __future__ import annotations
 
@@ -52,10 +55,13 @@ def build_cnn_plan(args, arch, cfg, mesh, ba):
         graph = None
     if args.strategy == "auto":
         t0 = time.time()
+        allow_cf = not args.no_cf
         if graph is not None:
-            plan = plan_lib.plan_graph(TPU_V5E, graph, specs, mesh)
+            plan = plan_lib.plan_graph(TPU_V5E, graph, specs, mesh,
+                                       allow_channel_filter=allow_cf)
         else:
-            plan = plan_lib.plan_line(TPU_V5E, specs, mesh)
+            plan = plan_lib.plan_line(TPU_V5E, specs, mesh,
+                                      allow_channel_filter=allow_cf)
         print(f"strategy optimizer ({time.time() - t0:.2f}s):")
         print(plan.describe())
     else:
@@ -127,7 +133,12 @@ def main():
                     help="CNN parallelization: 'uniform' applies one hybrid "
                          "ConvSharding to every layer (legacy); 'auto' runs "
                          "the paper's §V-C optimizer at startup and executes "
-                         "the solved per-layer plan with resharding")
+                         "the solved per-layer plan with resharding — "
+                         "including §III-D channel/filter layers "
+                         "(core.channel_conv) unless --no-cf")
+    ap.add_argument("--no-cf", action="store_true",
+                    help="exclude channel/filter candidates from --strategy "
+                         "auto (sample/spatial only, the pre-CF behavior)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)

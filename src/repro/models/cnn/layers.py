@@ -1,11 +1,14 @@
-"""Functional CNN layers, distribution-aware (paper §III-B).
+"""Functional CNN layers, distribution-aware (paper §III-B, §III-D).
 
 Every layer is (init, apply) with explicit parameter pytrees.  `apply` takes
-the layer's `ConvSharding` (the runtime projection of the paper's D): conv
-and pool route through the halo-exchange implementations in
-repro.core.spatial_conv; BN through repro.core.spatial_norm; element-wise ops
-parallelize trivially under any distribution (paper: "Element-wise
-operations such as ReLUs parallelize trivially").
+the layer's sharding descriptor (the runtime projection of the paper's D):
+under a `ConvSharding`, conv and pool route through the halo-exchange
+implementations in repro.core.spatial_conv and BN through
+repro.core.spatial_norm; under a `CFSharding` (§III-D channel/filter
+parallelism), conv and BN route through the row/column-parallel
+implementations in repro.core.channel_conv.  Element-wise ops parallelize
+trivially under any distribution (paper: "Element-wise operations such as
+ReLUs parallelize trivially").
 """
 from __future__ import annotations
 
@@ -16,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.channel_conv import CFSharding, cf_batch_norm, cf_conv2d
 from repro.core.spatial_conv import ConvSharding, spatial_conv2d, spatial_pool
 from repro.core.spatial_norm import batch_norm
 from repro.utils import shard_map
@@ -28,8 +32,12 @@ def conv_init(key, k: int, c_in: int, c_out: int, dtype=jnp.float32):
     return {"w": w}
 
 
-def conv_apply(params, x, *, stride=1, sharding: ConvSharding,
-               mesh=None, overlap=True, backend="xla"):
+def conv_apply(params, x, *, stride=1, sharding, mesh=None, overlap=True,
+               backend="xla"):
+    if isinstance(sharding, CFSharding):
+        return cf_conv2d(x, params["w"], strides=(stride, stride),
+                         sharding=sharding, mesh=mesh, overlap=overlap,
+                         backend=backend)
     sharding = sharding.fit(x.shape[1], x.shape[2], params["w"].shape[0],
                             stride, mesh)
     return spatial_conv2d(x, params["w"], strides=(stride, stride),
@@ -46,8 +54,10 @@ def bn_state(c: int):
             "var": jnp.ones((c,), jnp.float32)}
 
 
-def bn_apply(params, x, *, sharding: ConvSharding, mesh=None,
-             scope: str = "local"):
+def bn_apply(params, x, *, sharding, mesh=None, scope: str = "local"):
+    if isinstance(sharding, CFSharding):
+        return cf_batch_norm(x, params["gamma"], params["beta"],
+                             sharding=sharding, mesh=mesh, scope=scope)
     return batch_norm(x, params["gamma"], params["beta"], sharding=sharding,
                       mesh=mesh, scope=scope)
 

@@ -14,6 +14,11 @@ given configuration ("the same data decomposition for every layer"), but
 `apply` accepts a `NetworkPlan` (core.plan) — per-layer distributions with
 explicit §III-C reshard points, keyed by the `layer_specs` names — for
 strategy-optimizer-driven runs, and a legacy per-layer ConvSharding list.
+Plan entries may be `CFSharding`s (§III-D): those layers' conv+BN route
+through the channel/filter-parallel runtime (core.channel_conv) — the
+natural pick for the late blocks, whose 3x3 convs at 32x32-and-below
+spatial extents stop admitting spatial splits while C grows into the
+hundreds.
 """
 from __future__ import annotations
 

@@ -3,10 +3,14 @@
 Functional implementation on the distribution-aware layers; `apply` executes
 a `NetworkPlan` (core.plan): a per-layer distribution for every conv/pool —
 keyed by the same names `resnet_graph` exports to the strategy optimizer —
-with explicit §III-C reshard points at distribution changes.  A legacy
-single `ConvSharding` is accepted too (lowered to a uniform plan), which
-runs the whole network under one sample/spatial/hybrid distribution exactly
-as before (paper Table III uses 32 samples per 1/2/4 GPUs).
+with explicit §III-C reshard points at distribution changes.  Per-layer
+entries may be `CFSharding`s (§III-D channel/filter parallelism,
+core.channel_conv): the optimizer discovers those for the res4/res5 blocks,
+where 7x7 feature maps stop admitting spatial splits but C reaches
+1024/2048.  A legacy single `ConvSharding` is accepted too (lowered to a
+uniform plan), which runs the whole network under one sample/spatial/hybrid
+distribution exactly as before (paper Table III uses 32 samples per 1/2/4
+GPUs).
 
 `resnet_graph` exports the branchy layer DAG consumed by the strategy
 optimizer's longest-path-first pass (paper §V-C).

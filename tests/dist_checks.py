@@ -2,7 +2,8 @@
 process keeps a single CPU device (the 512-device env is dry-run-only).
 
 Usage:  python tests/dist_checks.py <group>
-Groups: conv | attention | ssm | models | train | compress | plan
+Groups: conv | attention | ssm | models | train | compress | plan | cf |
+        spatial2d
 Exits 0 on success; any assertion failure exits non-zero.
 """
 import os
@@ -397,6 +398,198 @@ def check_plan():
                                        rtol=5e-4, atol=5e-5)
 
 
+def check_cf():
+    """Channel/filter-parallel runtime (core.channel_conv, §III-D):
+    both modes vs the dense oracle, fwd + grads, plus the Pallas
+    implicit-GEMM backend in interpret mode; BN/bias; and a 4-device
+    solved auto plan containing CF layers vs the single-device oracle."""
+    from repro.core.channel_conv import (CFSharding, cf_batch_norm,
+                                         cf_bias_add, cf_conv2d)
+    from repro.core.spatial_conv import ConvSharding
+    from repro.core.spatial_norm import batch_norm
+
+    mesh = make_mesh(data=2, model=2)
+    key = jax.random.PRNGKey(0)
+
+    # --- conv parity: modes x strides x kernel sizes ----------------------
+    for (K, s, C, F) in [(3, 1, 8, 12), (3, 2, 8, 8), (1, 1, 4, 8)]:
+        x = jax.random.normal(key, (4, 8, 8, C), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (K, K, C, F)) * 0.1
+        ref = oracle_conv(x, w, s)
+        gr = jax.grad(lambda x, w: jnp.sum(oracle_conv(x, w, s) ** 2),
+                      argnums=(0, 1))(x, w)
+        for mode in ("channel", "filter"):
+            sh = CFSharding(batch_axes=("data",), cf_axis="model",
+                            mode=mode)
+            with mesh:
+                got = jax.jit(lambda x, w: cf_conv2d(
+                    x, w, strides=(s, s), sharding=sh, mesh=mesh))(x, w)
+                gd = jax.jit(jax.grad(lambda x, w: jnp.sum(cf_conv2d(
+                    x, w, strides=(s, s), sharding=sh, mesh=mesh) ** 2),
+                    argnums=(0, 1)))(x, w)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=2e-5, atol=2e-5)
+            for a, b in zip(gd, gr):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=3e-4, atol=3e-4)
+
+    # --- the Pallas implicit-GEMM kernel through the CF path (interpret
+    # mode on CPU — numerics-identical to the TPU lowering) ----------------
+    x = jax.random.normal(key, (4, 8, 8, 8), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 8)) * 0.1
+    sh = CFSharding(batch_axes=("data",), cf_axis="model")
+    with mesh:
+        got = jax.jit(lambda x, w: cf_conv2d(
+            x, w, sharding=sh, mesh=mesh, backend="pallas"))(x, w)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(oracle_conv(x, w, 1)),
+                               rtol=2e-5, atol=2e-5)
+
+    # --- BN: per-channel stats never cross the CF axis --------------------
+    x = jax.random.normal(key, (4, 8, 8, 8), jnp.float32) * 3 + 1
+    g = jax.random.normal(jax.random.PRNGKey(2), (8,)) + 2
+    b = jax.random.normal(jax.random.PRNGKey(3), (8,))
+    ref = batch_norm(x, g, b, sharding=ConvSharding(), scope="local")
+    with mesh:
+        got = jax.jit(lambda x: cf_batch_norm(
+            x, g, b, sharding=sh, mesh=mesh, scope="global"))(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    with mesh:
+        got = jax.jit(lambda x: cf_bias_add(x, b, sharding=sh,
+                                            mesh=mesh))(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x + b),
+                               rtol=1e-6, atol=1e-6)
+
+    # --- acceptance: a solved 4-device auto plan with >= 1 CF layer
+    # matches the single-device oracle (loss + grads) ----------------------
+    from repro.core import plan as plan_lib
+    from repro.core.perfmodel import TPU_V5E
+    from repro.data.pipeline import synthetic_mesh_batch
+    from repro.models.cnn import meshnet
+
+    # late layers: h=4 < k=3 — no spatial split fits, channels do (§III-D)
+    cfg = meshnet.MeshNetConfig("t", input_hw=16, in_channels=8,
+                                convs_per_block=1, widths=(16, 32, 32),
+                                bn_scope="global")
+    specs = meshnet.layer_specs(cfg, 2)
+    auto = plan_lib.plan_line(TPU_V5E, specs, mesh)
+    n_cf = sum(isinstance(lp.sharding, CFSharding)
+               for lp in auto.layers.values())
+    assert n_cf >= 1, auto.describe()
+    assert auto.n_reshards >= 1, auto.describe()   # CF <-> spatial shuffle
+
+    params = meshnet.init(jax.random.PRNGKey(0), cfg)
+    batch = {k: jnp.asarray(v) for k, v in
+             synthetic_mesh_batch(0, 2, 16, 8, out_hw=2).items()}
+    ref_l = meshnet.loss_fn(params, batch, cfg, ConvSharding())
+    ref_g = jax.grad(lambda p: meshnet.loss_fn(
+        p, batch, cfg, ConvSharding()))(params)
+    with mesh:
+        got_l = jax.jit(lambda p, bb: meshnet.loss_fn(
+            p, bb, cfg, auto, mesh))(params, batch)
+        got_g = jax.jit(jax.grad(lambda p: meshnet.loss_fn(
+            p, batch, cfg, auto, mesh)))(params)
+    np.testing.assert_allclose(float(got_l), float(ref_l), rtol=2e-5)
+    for a, r in zip(jax.tree.leaves(got_g), jax.tree.leaves(ref_g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   rtol=3e-4, atol=3e-5)
+
+    # --- consecutive CF layers chain with zero resharding -----------------
+    cf = {"C": ("model",), "F": ("model",), "N": ("data",)}
+    from repro.core.distribution import Dist
+    forced = plan_lib.compile_plan(
+        {"conv1_1": Dist("hybrid", {"N": ("data",), "H": ("model",)}),
+         "conv2_1": Dist("channel_filter", cf),
+         "conv3_1": Dist("channel_filter", cf),
+         "pred": Dist("sample", {"N": ("data",)})},
+        specs, mesh)
+    lps = forced.layers
+    assert lps["conv2_1"].reshard_in and not lps["conv3_1"].reshard_in
+    with mesh:
+        got_l = jax.jit(lambda p, bb: meshnet.loss_fn(
+            p, bb, cfg, forced, mesh))(params, batch)
+    np.testing.assert_allclose(float(got_l), float(ref_l), rtol=2e-5)
+
+
+def check_spatial2d():
+    """W-axis and 2-D (H x W) spatial decompositions: conv fwd + grads,
+    pooling, and a compiled plan with W-splits vs the oracle (the ROADMAP
+    item on exercising the 2-D decomposition)."""
+    from repro.core.spatial_conv import spatial_conv2d, spatial_pool, \
+        ConvSharding
+
+    mesh = make_mesh(data=2, model=2)
+    key = jax.random.PRNGKey(0)
+    shw = ConvSharding(batch_axes=("model",), w_axis="data")   # W only
+    sh2 = ConvSharding(batch_axes=(), h_axis="model", w_axis="data")
+    for sh in (shw, sh2):
+        for (K, s) in [(3, 1), (3, 2), (7, 2)]:
+            x = jax.random.normal(key, (2, 16, 16, 3), jnp.float32)
+            w = jax.random.normal(jax.random.PRNGKey(1),
+                                  (K, K, 3, 5)) * 0.1
+            ref = oracle_conv(x, w, s)
+            gr = jax.grad(lambda x, w: jnp.sum(oracle_conv(x, w, s) ** 2),
+                          argnums=(0, 1))(x, w)
+            for overlap in (False, True):
+                with mesh:
+                    got = jax.jit(lambda x, w: spatial_conv2d(
+                        x, w, strides=(s, s), sharding=sh, mesh=mesh,
+                        overlap=overlap))(x, w)
+                    gd = jax.jit(jax.grad(
+                        lambda x, w: jnp.sum(spatial_conv2d(
+                            x, w, strides=(s, s), sharding=sh, mesh=mesh,
+                            overlap=overlap) ** 2),
+                        argnums=(0, 1)))(x, w)
+                np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                           rtol=2e-5, atol=2e-5)
+                for a, b in zip(gd, gr):
+                    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                               rtol=3e-4, atol=3e-4)
+        # pooling under W / H x W splits (max needs the -inf edge halo)
+        x = jax.random.normal(key, (2, 16, 16, 3), jnp.float32)
+        for kind in ("max", "avg"):
+            ref = spatial_pool(x, window=(3, 3), strides=(2, 2),
+                               sharding=ConvSharding(), kind=kind)
+            with mesh:
+                got = jax.jit(lambda x: spatial_pool(
+                    x, window=(3, 3), strides=(2, 2), sharding=sh,
+                    mesh=mesh, kind=kind))(x)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=1e-6, atol=1e-6)
+
+    # a compiled plan whose dists shard W — through the full model stack
+    from repro.core import plan as plan_lib
+    from repro.core.distribution import Dist
+    from repro.data.pipeline import synthetic_mesh_batch
+    from repro.models.cnn import meshnet
+    cfg = meshnet.MeshNetConfig("t", input_hw=32, in_channels=4,
+                                convs_per_block=1, widths=(8, 16),
+                                bn_scope="global")
+    specs = meshnet.layer_specs(cfg, 4)
+    plan = plan_lib.compile_plan(
+        {"conv1_1": Dist("s2d", {"H": ("model",), "W": ("data",)}),
+         "conv2_1": Dist("wsplit", {"N": ("model",), "W": ("data",)}),
+         "pred": Dist("hybrid", {"N": ("data",), "H": ("model",)})},
+        specs, mesh)
+    assert plan.n_reshards == 2, plan.describe()
+    params = meshnet.init(jax.random.PRNGKey(0), cfg)
+    b = {k: jnp.asarray(v) for k, v in
+         synthetic_mesh_batch(0, 4, 32, 4, out_hw=8).items()}
+    ref_l = meshnet.loss_fn(params, b, cfg, ConvSharding())
+    ref_g = jax.grad(lambda p: meshnet.loss_fn(p, b, cfg,
+                                               ConvSharding()))(params)
+    with mesh:
+        got_l = jax.jit(lambda p, bb: meshnet.loss_fn(
+            p, bb, cfg, plan, mesh))(params, b)
+        got_g = jax.jit(jax.grad(lambda p: meshnet.loss_fn(
+            p, b, cfg, plan, mesh)))(params)
+    np.testing.assert_allclose(float(got_l), float(ref_l), rtol=2e-5)
+    for a, r in zip(jax.tree.leaves(got_g), jax.tree.leaves(ref_g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   rtol=3e-4, atol=3e-5)
+
+
 def check_compress():
     from repro.optim.grad_compress import cross_pod_mean
     mesh = make_mesh(data=2, model=2, pod=2)
@@ -430,7 +623,8 @@ def check_compress():
 
 GROUPS = {"conv": check_conv, "attention": check_attention,
           "ssm": check_ssm, "models": check_models, "train": check_train,
-          "compress": check_compress, "plan": check_plan}
+          "compress": check_compress, "plan": check_plan,
+          "cf": check_cf, "spatial2d": check_spatial2d}
 
 if __name__ == "__main__":
     GROUPS[sys.argv[1]]()

@@ -9,7 +9,8 @@ import numpy as np
 import pytest
 
 from conftest import run_dist_group
-from repro.core.distribution import Dist
+from repro.core.channel_conv import CFSharding
+from repro.core.distribution import Dist, channel_filter
 from repro.core.perfmodel import ConvLayer, LASSEN, TPU_V5E
 from repro.core.plan import (NetworkPlan, PlanError, compile_plan,
                              dist_to_sharding, executable_candidates,
@@ -32,15 +33,45 @@ def test_dist_to_sharding_basic():
     assert sh == ConvSharding(batch_axes=(), h_axis="model", w_axis="data")
 
 
+def test_dist_to_sharding_lowers_channel_filter():
+    """CF dists (§III-D) lower to CFSharding — no longer perf-model-only."""
+    sh = dist_to_sharding(Dist("cf", {"N": ("data",), "C": ("model",),
+                                      "F": ("model",)}), MS22)
+    assert sh == CFSharding(batch_axes=("data",), cf_axis="model")
+    sh = dist_to_sharding(channel_filter(), MS22)
+    assert sh.cf_axis == "model" and sh.mode == "channel"
+
+
 def test_dist_to_sharding_rejects_non_executable():
-    with pytest.raises(PlanError):   # channel/filter: perf-model only
-        dist_to_sharding(Dist("cf", {"N": ("data",), "C": ("model",),
-                                     "F": ("model",)}), MS22)
     with pytest.raises(PlanError):   # multi-axis spatial
         dist_to_sharding(Dist("s", {"H": ("data", "model")}), MS22)
     with pytest.raises(PlanError):   # non-CNN dim
         dist_to_sharding(Dist("seq", {"N": ("data",), "S": ("model",)}),
                          MS22)
+    with pytest.raises(PlanError):   # CF + spatial on one layer
+        dist_to_sharding(Dist("cfh", {"H": ("data",), "C": ("model",),
+                                      "F": ("model",)}), MS22)
+    with pytest.raises(PlanError):   # C and F on different axes
+        dist_to_sharding(Dist("cx", {"C": ("model",), "F": ("data",)}),
+                         MS22)
+    with pytest.raises(PlanError):   # multi-axis CF group
+        dist_to_sharding(Dist("c2", {"C": ("data", "model"),
+                                     "F": ("data", "model")}), MS22)
+
+
+def test_plan_error_names_layer_and_suggests_demotion():
+    """PlanError diagnostics: the offending layer and dist are named and
+    the nearest executable demotion is suggested."""
+    with pytest.raises(PlanError, match=r"layer 'res9'.*nearest executable"):
+        dist_to_sharding(Dist("cfh", {"H": ("data",), "C": ("model",),
+                                      "F": ("model",)}), MS22, layer="res9")
+    with pytest.raises(PlanError, match=r"demot"):
+        dist_to_sharding(Dist("s", {"H": ("data", "model")}), MS22)
+    # compile_plan names the layer for the indivisible-batch case too
+    specs = [ConvLayer("odd", n=3, c=4, h=32, w=32, f=8, k=3, s=1)]
+    with pytest.raises(PlanError, match=r"layer 'odd'.*nearest executable"):
+        compile_plan({"odd": Dist("sample", {"N": ("data", "model")})},
+                     specs, MS22)
 
 
 def test_normalize_drops_size1_axes():
@@ -85,6 +116,41 @@ def test_compile_plan_demotes_unfit_geometry():
     lp = plan.layers["a"]
     assert lp.sharding.h_axis is None
     assert "demoted" in lp.note
+
+
+def test_compile_plan_demotes_nondivisible_channels():
+    """CF edge case: channel counts that don't divide the CF mesh axis are
+    demoted to the sample-parallel remainder at compile time, recorded."""
+    specs = [ConvLayer("a", n=8, c=5, h=8, w=8, f=8, k=3, s=1),   # C=5 % 2
+             ConvLayer("b", n=8, c=8, h=8, w=8, f=7, k=3, s=1)]   # F=7 % 2
+    dists = {"a": Dist("cf", {"N": ("data",), "C": ("model",),
+                              "F": ("model",)}),
+             "b": Dist("cf", {"N": ("data",), "C": ("model",),
+                              "F": ("model",)})}
+    plan = compile_plan(dists, specs, MS22, machine=LASSEN)
+    for name in ("a", "b"):
+        lp = plan.layers[name]
+        assert lp.sharding == ConvSharding(batch_axes=("data",))
+        assert "demoted C/F" in lp.note
+    # the cost report is computed under the demoted (executed) dists
+    assert plan.predicted is not None
+    # divisible channels survive as CFSharding
+    specs[0] = ConvLayer("a", n=8, c=4, h=8, w=8, f=8, k=3, s=1)
+    plan = compile_plan({"a": dists["a"]}, specs[:1], MS22)
+    assert plan.layers["a"].sharding == CFSharding(batch_axes=("data",),
+                                                   cf_axis="model")
+    assert not plan.layers["a"].note
+
+
+def test_cf_candidates_executable_and_solver_uses_them():
+    """A layer whose spatial extent is below the kernel but whose channels
+    divide the mesh gets CF candidates; with CF disabled it falls back to
+    replicated."""
+    layer = ConvLayer("late", n=2, c=32, h=4, w=4, f=32, k=3, s=1)
+    cands = executable_candidates(layer, MS22)
+    assert any(d.axes("C") for d in cands), [d.name for d in cands]
+    nocf = executable_candidates(layer, MS22, allow_channel_filter=False)
+    assert not any(d.axes("C") for d in nocf)
 
 
 def test_compile_plan_rejects_indivisible_batch():
@@ -164,6 +230,24 @@ def test_auto_plan_1x1_mesh_matches_oracle_bitwise():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_cf_plan_1x1_mesh_matches_oracle_bitwise():
+    """A plan whose dists are channel_filter() everywhere, compiled on a
+    1x1 mesh, normalizes to the dense single-device path: the CF lowering
+    must be bitwise-invisible there (the oracle-equivalence contract)."""
+    mesh = make_mesh(data=1, model=1)
+    specs = meshnet.layer_specs(CFG, 4)
+    dists = {l.name: channel_filter() for l in specs}
+    plan = compile_plan(dists, specs, mesh)
+    for lp in plan.layers.values():     # size-1 axes all dropped
+        assert lp.sharding == ConvSharding()
+        assert not lp.reshard_in
+    l_ref, g_ref = _loss_and_grads(ConvSharding(), None)
+    l_got, g_got = _loss_and_grads(plan, mesh)
+    np.testing.assert_array_equal(np.asarray(l_got), np.asarray(l_ref))
+    for a, b in zip(jax.tree.leaves(g_got), jax.tree.leaves(g_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_resnet_uniform_plan_matches_legacy_bitwise():
     cfg = resnet.ResNetConfig(name="tiny", input_hw=32, n_classes=10,
                               stages=(1, 1), widths=(4, 8))
@@ -182,3 +266,17 @@ def test_plan_distributed():
     """Solved auto plan vs uniform plan vs single-device oracle on a 2x2
     mesh (subprocess; numeric agreement for loss and grads)."""
     run_dist_group("plan")
+
+
+def test_plan_cf_distributed():
+    """4-device uniform-vs-CF agreement: the solved plan contains >= 1 CF
+    layer and matches the oracle (dist_checks group 'cf'; fast — also run
+    by the CI fast lane)."""
+    run_dist_group("cf")
+
+
+@pytest.mark.slow
+def test_plan_spatial2d_distributed():
+    """W-axis and 2-D (H x W) spatial decompositions through conv/pool and
+    a compiled W-split plan (dist_checks group 'spatial2d')."""
+    run_dist_group("spatial2d")
