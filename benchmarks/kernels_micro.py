@@ -2,26 +2,15 @@
 (the semantic implementations the Pallas kernels must match), plus
 model-predicted TPU-v5e times for the same shapes from the roofline.
 CSV: name,us_per_call,derived."""
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import time_fn as _time
 from repro.kernels import ref
 
 PEAK = 197e12
 BW = 819e9
-
-
-def _time(f, *args, iters=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        f(*args).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = f(*args)
-    jax.tree.leaves(out)[0].block_until_ready()
-    return (time.perf_counter() - t0) / iters
 
 
 def run(csv=True):

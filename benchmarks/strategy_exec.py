@@ -1,11 +1,16 @@
 """Uniform vs solved per-layer plans: measured step time cross-checked
 against the §V perf model — the validation loop the paper closes with
-(predicted vs measured, Table I-III).
+(predicted vs measured, Table I-III), now on *calibrated* costs.
 
-  PYTHONPATH=src python -m benchmarks.strategy_exec [ndevices]
+  PYTHONPATH=src python -m benchmarks.strategy_exec [ndevices] \
+      [--out BENCH_strategy.json] [--calibration BENCH_calibration.json] \
+      [--gate] [--gate-tol 0.10] [--reps N]
 
 Runs on `ndevices` host CPU devices (default 4, set before jax import).
-Three workloads:
+First the §V cost inputs are calibrated on the live backend
+(core.calibrate: local-conv EmpiricalTable over the workloads' shard
+shapes, fitted α/β and roofline constants; written to --calibration so CI
+uploads it and later runs reuse it), then three workloads execute:
 
   * mesh128 — the strategy-choice workload from PR 1: uniform hybrid vs
     the §V-C solved auto plan (per-layer dists + reshard points);
@@ -14,101 +19,121 @@ Three workloads:
     cost terms (reduce-scatter fwd, all-gather BPw) against the
     core.channel_conv runtime, and A/Bs auto-with-CF vs auto-no-CF;
   * mesh2k_proxy — the 2K mesh-tangling geometry (5 convs/block) at
-    reduced resolution under the 2-D H x W spatial decomposition, the
-    ROADMAP item on exercising W-axis splits.
+    reduced resolution under the 2-D H x W spatial decomposition.
 
-Each prints `name,us_per_call,derived` CSV rows carrying the perf-model
-prediction from a host-calibrated Machine.  The absolute model/measured
-ratio calibrates the Machine constants; the *relative* ordering
-(auto <= uniform) is the optimizer's promise.
+Output is both the legacy `name,us_per_call,derived` CSV rows and a
+machine-readable BENCH_strategy.json: per-workload measured/predicted step
+times, the auto-vs-uniform measured ratio (the optimizer's ordering
+promise), and calibrated-vs-analytic solver agreement (does the measured
+table change the solved plan, and by how much the predicted cost).  With
+--gate the exit code enforces the ordering promise — the CI bench lane
+fails when a solved auto plan measures slower than uniform anywhere.
 """
 import os
 import sys
 
 if __name__ == "__main__":
-    _n = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+    # the positional device count must come first: it is consumed before
+    # jax import (XLA fixes the host device count at backend init)
+    _n = int(sys.argv[1]) if len(sys.argv) > 1 and sys.argv[1].isdigit() \
+        else 4
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={_n}")
 
+import argparse  # noqa: E402
 import dataclasses  # noqa: E402
-import time  # noqa: E402
+import json  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from benchmarks._timing import interleaved_min  # noqa: E402
 
-def _time_step(fn, *args, reps: int = 5) -> float:
-    fn(*args)[0].block_until_ready()          # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    out[0].block_until_ready()
-    return (time.perf_counter() - t0) / reps
+SCHEMA = "repro/bench_strategy@1"
 
 
-def _host_machine():
-    """Calibrate a perf-model Machine to this host: measure achieved conv
-    flops once, use loopback-ish comm constants (shared memory)."""
-    from repro.core.perfmodel import Machine
-    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64, 64, 32))
-    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 32, 64)) * 0.1
-    f = jax.jit(lambda x, w: jax.lax.conv_general_dilated(
-        x, w, (1, 1), ((1, 1), (1, 1)),
-        dimension_numbers=("NHWC", "HWIO", "NHWC")))
-    f(x, w).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(10):
-        y = f(x, w)
-    y.block_until_ready()
-    dt = (time.perf_counter() - t0) / 10
-    flops = 2.0 * 4 * 32 * 64 * 64 * 9 * 64
-    return Machine("host-cpu", peak_flops=flops / dt, mem_bw=20e9,
-                   alpha=5e-6, beta=1 / 10.0e9,
-                   alpha_coll=8e-6, beta_coll=1 / 10.0e9, wordsize=4,
-                   compute_efficiency=1.0)
-
-
-def _uniform_plan(plan_lib, sh, names, specs, mesh, machine):
+def _uniform_plan(plan_lib, sh, names, specs, mesh, machine, table):
     """A uniform plan costed through the same §V-B model for comparability."""
     uniform = plan_lib.NetworkPlan.uniform(sh, names)
     return dataclasses.replace(
         uniform, predicted=plan_lib.compile_plan(
             {n: plan_lib._sharding_to_dist(sh) for n in names},
-            specs, mesh, machine=machine).predicted)
+            specs, mesh, machine=machine, table=table).predicted)
 
 
-def _bench_plans(workload, cfg, batch, specs, plans, mesh) -> None:
+def _measure_plans(cfg, batch, specs, plans, mesh, reps, rounds=4):
+    """Measured seconds/step for every plan of one workload: compile and
+    warm each train step, then hand the competing steps to the shared
+    interleaved comparator (benchmarks/_timing.interleaved_min) so the
+    auto-vs-uniform ratio is robust to host-load drift.  Returns
+    {tag: seconds}."""
+    import functools
     from repro.data.pipeline import synthetic_mesh_batch
     from repro.models.cnn import meshnet
     params = meshnet.init(jax.random.PRNGKey(0), cfg)
     b = {k: jnp.asarray(v) for k, v in synthetic_mesh_batch(
         0, batch, cfg.input_hw, cfg.in_channels,
         out_hw=cfg.out_hw).items()}
-    for tag, plan in plans:
-        def put(v):
-            first = specs[0]
-            spec = plan.input_spec(first.name, first.h, first.w,
-                                   first.k, first.s, mesh)
-            return jax.device_put(v, NamedSharding(mesh, spec))
-
-        lbl_spec = P("data") if batch % dict(mesh.shape)["data"] == 0 \
-            else P(None)
-        bb = {"image": put(b["image"]),
-              "label": jax.device_put(b["label"],
-                                      NamedSharding(mesh, lbl_spec))}
-        with mesh:
+    first = specs[0]
+    lbl_spec = P("data") if batch % dict(mesh.shape)["data"] == 0 else P(None)
+    with mesh:
+        steps = {}
+        for tag, plan in plans:
+            spec = plan.input_spec(first.name, first.h, first.w, first.k,
+                                   first.s, mesh)
+            bb = {"image": jax.device_put(b["image"],
+                                          NamedSharding(mesh, spec)),
+                  "label": jax.device_put(b["label"],
+                                          NamedSharding(mesh, lbl_spec))}
             step = jax.jit(jax.value_and_grad(
-                lambda p, x: meshnet.loss_fn(p, x, cfg, plan, mesh)))
-            dt = _time_step(lambda p, x: step(p, x), params, bb)
+                lambda p, x, plan=plan: meshnet.loss_fn(p, x, cfg, plan,
+                                                        mesh)))
+            step(params, bb)[0].block_until_ready()        # compile + warm
+            steps[tag] = functools.partial(step, params, bb)
+        return interleaved_min(steps, reps=reps, rounds=rounds)
+
+
+def _solver_agreement(plan_lib, machine, table, specs, mesh, **kw):
+    """Does solving on the measured table change the plan vs the analytic
+    model, and by how much the predicted cost?  (The calibrated and the
+    analytic solver must both return executable plans — this runs both.)"""
+    auto_cal = plan_lib.plan_line(machine, specs, mesh, table=table, **kw)
+    auto_ana = plan_lib.plan_line(machine, specs, mesh, **kw)
+    differ = [n for n in auto_cal.layers
+              if not auto_cal.layers[n].dist.same_as(auto_ana.layers[n].dist)]
+    return auto_cal, {
+        "calibrated_predicted_s": auto_cal.predicted["total"],
+        "analytic_predicted_s": auto_ana.predicted["total"],
+        "n_layers_differ": len(differ),
+        "layers_differ": differ,
+        "same_plan": not differ,
+    }
+
+
+def _bench_workload(name, cfg, batch, specs, plans, mesh, reps, rounds,
+                    baseline_tag, auto_tag, agreement):
+    measured = _measure_plans(cfg, batch, specs, plans, mesh, reps, rounds)
+    entries = {}
+    for tag, plan in plans:
+        dt = measured[tag]
         pred = plan.predicted["total"] if plan.predicted else float("nan")
-        print(f"strategy_exec/{workload}/{tag},{dt*1e6:.1f},"
+        entries[tag] = {"measured_s": dt, "predicted_s": pred,
+                        "model_measured_ratio": pred / dt,
+                        "n_reshards": plan.n_reshards}
+        print(f"strategy_exec/{name}/{tag},{dt*1e6:.1f},"
               f"predicted_us={pred*1e6:.1f} "
               f"model_measured_ratio={pred/dt:.3f} "
               f"reshards={plan.n_reshards}")
+    ratio = entries[auto_tag]["measured_s"] / \
+        entries[baseline_tag]["measured_s"]
+    return {"baseline": baseline_tag, "auto": auto_tag, "entries": entries,
+            "auto_vs_uniform_measured": ratio,
+            "solver_agreement": agreement}
 
 
-def run() -> None:
+def run(args) -> int:
+    from repro.core import calibrate as calib
     from repro.core import plan as plan_lib
     from repro.core.channel_conv import CFSharding
     from repro.core.spatial_conv import ConvSharding
@@ -116,60 +141,150 @@ def run() -> None:
     from repro.models.cnn import meshnet
 
     ndev = jax.device_count()
+    # only a positional count the user actually passed can be "ignored"
+    # (XLA_FLAGS set in the environment is honored as-is, no warning)
+    if args.ndevices is not None and args.ndevices != ndev:
+        print(f"# WARNING: requested {args.ndevices} devices but the "
+              f"backend has {ndev} — the positional count only takes "
+              f"effect as the FIRST argument (it must be consumed before "
+              f"jax import) and is overridden by XLA_FLAGS in the "
+              f"environment")
     data = max(1, ndev // 2)
     model = max(1, ndev // data)
     mesh = make_mesh(data=data, model=model)
-    machine = _host_machine()
     uni_sh = ConvSharding(batch_axes=("data",), h_axis="model")
 
-    # --- mesh128: the strategy choice is non-trivial on this mesh ---------
+    # --- workloads (same three as always) --------------------------------
+    cfg128 = meshnet.MeshNetConfig("bench", input_hw=128, in_channels=8,
+                                   convs_per_block=2, widths=(16, 32, 32),
+                                   bn_scope="global")
+    cfg16 = meshnet.MeshNetConfig("bench16", input_hw=16, in_channels=8,
+                                  convs_per_block=1, widths=(32, 64, 64),
+                                  bn_scope="global")
+    cfg2k = meshnet.MeshNetConfig("bench2k", input_hw=64, in_channels=8,
+                                  convs_per_block=5, widths=(16, 32),
+                                  bn_scope="global")
+    specs128 = meshnet.layer_specs(cfg128, 2)
+    specs16 = meshnet.layer_specs(cfg16, 2)
+    specs2k = meshnet.layer_specs(cfg2k, 1)
+
+    # --- calibrate the cost inputs on the live backend (§V, measured) ----
+    union = list(specs128) + list(specs16) + \
+        (list(specs2k) if data > 1 else [])
+    cal = calib.load_or_run(args.calibration, union, mesh, reps=args.reps)
+    machine, table = cal.machine, cal.table
+
+    workloads = {}
+
+    # --- mesh128: the strategy choice is non-trivial on this mesh --------
     # (batch 2 < device count: pure sample parallelism invalid)
-    cfg = meshnet.MeshNetConfig("bench", input_hw=128, in_channels=8,
-                                convs_per_block=2, widths=(16, 32, 32),
-                                bn_scope="global")
-    specs = meshnet.layer_specs(cfg, 2)
-    names = meshnet.layer_names(cfg)
-    _bench_plans("mesh128", cfg, 2, specs, (
-        ("uniform", _uniform_plan(plan_lib, uni_sh, names, specs, mesh,
-                                  machine)),
-        ("auto", plan_lib.plan_line(machine, specs, mesh))), mesh)
+    names = meshnet.layer_names(cfg128)
+    auto, agree = _solver_agreement(plan_lib, machine, table, specs128, mesh)
+    workloads["mesh128"] = _bench_workload(
+        "mesh128", cfg128, 2, specs128,
+        (("uniform", _uniform_plan(plan_lib, uni_sh, names, specs128, mesh,
+                                   machine, table)),
+         ("auto", auto)),
+        mesh, args.reps, args.rounds, "uniform", "auto", agree)
 
     # --- mesh16cf: late layers too small to split spatially (h=4 < k) but
     # channel-heavy — the §III-D sweet spot.  The auto plan should contain
     # CF layers; its model_measured_ratio cross-checks the CF cost terms
     # against the core.channel_conv runtime. -----------------------------
-    cfg = meshnet.MeshNetConfig("bench16", input_hw=16, in_channels=8,
-                                convs_per_block=1, widths=(32, 64, 64),
-                                bn_scope="global")
-    specs = meshnet.layer_specs(cfg, 2)
-    names = meshnet.layer_names(cfg)
-    auto_cf = plan_lib.plan_line(machine, specs, mesh)
+    names = meshnet.layer_names(cfg16)
+    auto_cf, agree = _solver_agreement(plan_lib, machine, table, specs16,
+                                       mesh)
     n_cf = sum(isinstance(lp.sharding, CFSharding)
                for lp in auto_cf.layers.values())
     print(f"# mesh16cf auto plan: {n_cf} CF layers")
-    _bench_plans("mesh16cf", cfg, 2, specs, (
-        ("uniform", _uniform_plan(plan_lib, uni_sh, names, specs, mesh,
-                                  machine)),
-        ("auto_cf", auto_cf),
-        ("auto_nocf", plan_lib.plan_line(machine, specs, mesh,
-                                         allow_channel_filter=False))),
-        mesh)
+    workloads["mesh16cf"] = _bench_workload(
+        "mesh16cf", cfg16, 2, specs16,
+        (("uniform", _uniform_plan(plan_lib, uni_sh, names, specs16, mesh,
+                                   machine, table)),
+         ("auto_cf", auto_cf),
+         ("auto_nocf", plan_lib.plan_line(machine, specs16, mesh,
+                                          table=table,
+                                          allow_channel_filter=False))),
+        mesh, args.reps, args.rounds, "uniform", "auto_cf", agree)
+    workloads["mesh16cf"]["n_cf_layers"] = n_cf
 
     # --- mesh2k_proxy: the 2K model's depth (5 convs/block) at reduced
     # resolution, under the 2-D H x W decomposition (W on the data axis,
     # H on the model axis; batch 1 — the paper's memory-bound regime). ----
     if data > 1:
-        cfg = meshnet.MeshNetConfig("bench2k", input_hw=64, in_channels=8,
-                                    convs_per_block=5, widths=(16, 32),
-                                    bn_scope="global")
-        specs = meshnet.layer_specs(cfg, 1)
-        names = meshnet.layer_names(cfg)
+        names = meshnet.layer_names(cfg2k)
         hw_sh = ConvSharding(batch_axes=(), h_axis="model", w_axis="data")
-        _bench_plans("mesh2k_proxy", cfg, 1, specs, (
-            ("hxw", _uniform_plan(plan_lib, hw_sh, names, specs, mesh,
-                                  machine)),
-            ("auto", plan_lib.plan_line(machine, specs, mesh))), mesh)
+        auto, agree = _solver_agreement(plan_lib, machine, table, specs2k,
+                                        mesh)
+        workloads["mesh2k_proxy"] = _bench_workload(
+            "mesh2k_proxy", cfg2k, 1, specs2k,
+            (("hxw", _uniform_plan(plan_lib, hw_sh, names, specs2k, mesh,
+                                   machine, table)),
+             ("auto", auto)),
+            mesh, args.reps, args.rounds, "hxw", "auto", agree)
+
+    # --- the gate: the optimizer's ordering promise ----------------------
+    tol = args.gate_tol
+    failures = [
+        f"{name}: {wl['auto']} "
+        f"{wl['entries'][wl['auto']]['measured_s']*1e6:.1f}us"
+        f" > {1 + tol:.2f}x {wl['baseline']} "
+        f"{wl['entries'][wl['baseline']]['measured_s']*1e6:.1f}us"
+        for name, wl in workloads.items()
+        if wl["auto_vs_uniform_measured"] > 1 + tol]
+    report = {
+        "schema": SCHEMA,
+        "backend": jax.default_backend(),
+        "ndevices": ndev,
+        "mesh": dict(mesh.shape),
+        "reps": args.reps,
+        "rounds": args.rounds,
+        "calibration": {"path": args.calibration,
+                        "machine": dataclasses.asdict(machine),
+                        "table_entries": len(table)},
+        "workloads": workloads,
+        "gate": {"enabled": bool(args.gate), "tolerance": tol,
+                 "ok": not failures, "failures": failures},
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"# wrote {args.out}")
+    for name, wl in workloads.items():
+        print(f"# {name}: auto/uniform measured "
+              f"{wl['auto_vs_uniform_measured']:.3f}, solver agreement "
+              f"{'same plan' if wl['solver_agreement']['same_plan'] else str(wl['solver_agreement']['n_layers_differ']) + ' layers differ'}")
+    if failures:
+        print("# GATE FAILURES (solved plan measured slower than its "
+              "baseline):")
+        for x in failures:
+            print(f"#   {x}")
+        return 1 if args.gate else 0
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("ndevices", nargs="?", type=int, default=None,
+                    help="host CPU device count (must be first arg; read "
+                         "before jax import to set XLA_FLAGS; default 4)")
+    ap.add_argument("--out", default="BENCH_strategy.json")
+    ap.add_argument("--calibration", default="BENCH_calibration.json",
+                    help="calibration JSON: loaded when present, else "
+                         "measured over the bench workloads and written")
+    ap.add_argument("--reps", type=int, default=5,
+                    help="timed calls per round")
+    ap.add_argument("--rounds", type=int, default=4,
+                    help="interleaved measurement rounds per workload (the "
+                         "per-plan time is the min over per-round means)")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit non-zero when a solved auto plan measures "
+                         "slower than the uniform baseline (the CI lane's "
+                         "perf-trajectory gate)")
+    ap.add_argument("--gate-tol", type=float, default=0.10,
+                    help="noise tolerance for the gate: fail only when "
+                         "auto > (1+tol) * uniform measured")
+    return run(ap.parse_args(argv))
 
 
 if __name__ == "__main__":
-    run()
+    sys.exit(main())

@@ -169,10 +169,14 @@ def cf_conv2d(x, w, *, strides=(1, 1), sharding: CFSharding, mesh=None,
                           (same_pads(k_h, strides[0]),
                            same_pads(k_w, strides[1])), backend)
     c, f = w.shape[2], w.shape[3]
-    assert c % p == 0 and f % p == 0, (
-        f"channels C={c}, F={f} not divisible by {p}-way CF axis "
-        f"{sharding.cf_axis!r} — core.plan demotes such layers at compile "
-        "time; direct callers must pre-check CFSharding.fits_channels")
+    if c % p or f % p:
+        # hard error, not an assert: under `python -O` a stripped assert
+        # would let _slice_block truncate the channel sum silently
+        raise ValueError(
+            f"channels C={c}, F={f} not divisible by {p}-way CF axis "
+            f"{sharding.cf_axis!r} — core.plan demotes such layers at "
+            "compile time; direct callers must pre-check "
+            "CFSharding.fits_channels")
     fn = functools.partial(_local_cf_conv, strides=strides,
                            sharding=sharding, mesh_shape=mesh_shape,
                            backend=backend)

@@ -142,13 +142,38 @@ class ConvLayer:
 class EmpiricalTable:
     """Optional measured-runtime lookup, the paper's own methodology: keys
     (kind, n, c, h, w, f, k, s) -> seconds.  Falls back to the analytic
-    model for missing entries."""
+    model for missing entries.  `core.calibrate` fills it by timing local
+    convolutions at the shard shapes the solver's candidates produce, and
+    round-trips it through JSON (BENCH_calibration.json)."""
 
     def __init__(self, entries: Mapping[tuple, float] | None = None):
         self.entries = dict(entries or {})
 
     def lookup(self, layer: ConvLayer, n, c, h, w, f) -> float | None:
         return self.entries.get((layer.kind, n, c, h, w, f, layer.k, layer.s))
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, EmpiricalTable) and \
+            self.entries == other.entries
+
+    def to_json(self) -> list:
+        """JSON-serializable form: sorted [[kind, n, c, h, w, f, k, s], t]
+        rows (tuple keys cannot be JSON object keys)."""
+        return [[list(k), v] for k, v in sorted(self.entries.items())]
+
+    @classmethod
+    def from_json(cls, rows: Sequence) -> "EmpiricalTable":
+        return cls({(str(k[0]), *(int(v) for v in k[1:])): float(t)
+                    for k, t in rows})
+
+
+# fixed kernel-launch overhead added to every conv roofline estimate; the
+# calibrator (core.calibrate) subtracts it before attributing the linear-fit
+# intercept to eff_halfwork, so the two must stay one constant.
+LAUNCH_OVERHEAD = 4e-6
 
 
 def conv_compute_time(m: Machine, layer: ConvLayer, n, c, h, w, f,
@@ -175,7 +200,7 @@ def conv_compute_time(m: Machine, layer: ConvLayer, n, c, h, w, f,
     # roofline max(compute, memory) + a fixed kernel-launch overhead; the
     # launch overhead is what caps strong scaling of tiny local convs
     # (paper Fig. 2, res3b fwd) — without it the model is wildly optimistic.
-    return max(flops / (e * m.peak_flops), byts / m.mem_bw) + 4e-6
+    return max(flops / (e * m.peak_flops), byts / m.mem_bw) + LAUNCH_OVERHEAD
 
 
 # ---------------------------------------------------------------------------

@@ -41,7 +41,10 @@ logging.basicConfig(level=logging.INFO)
 def build_cnn_plan(args, arch, cfg, mesh, ba):
     """--strategy uniform: the legacy one-ConvSharding-everywhere plan.
     --strategy auto: run the §V-C optimizer on the arch's layer DAG and
-    compile the solved per-layer distributions (core.plan)."""
+    compile the solved per-layer distributions (core.plan).  With
+    --calibrate the optimizer solves on *measured* costs: a calibration
+    (core.calibrate) is loaded from the given path when it exists, else
+    microbenchmarked on the live backend and written there."""
     from repro.core import plan as plan_lib
     from repro.core.perfmodel import TPU_V5E
     from repro.core.spatial_conv import ConvSharding
@@ -53,14 +56,32 @@ def build_cnn_plan(args, arch, cfg, mesh, ba):
         from repro.models.cnn import meshnet as M
         specs = M.layer_specs(cfg, args.batch)
         graph = None
+    machine, table = TPU_V5E, None
+    if args.calibrate and args.strategy != "auto":
+        # measured costs only feed the solver — don't spend minutes
+        # microbenchmarking for a plan that ignores them
+        logging.warning("--calibrate only affects --strategy auto; "
+                        "skipping calibration for --strategy %s",
+                        args.strategy)
+    elif args.calibrate:
+        from repro.core import calibrate as calib
+        t0 = time.time()
+        # honor --no-cf: don't spend startup time measuring CF candidate
+        # shapes and collective sizes the solver is forbidden to pick
+        cal = calib.load_or_run(args.calibrate, specs, mesh,
+                                allow_channel_filter=not args.no_cf)
+        print(f"calibration ready ({time.time() - t0:.2f}s, "
+              f"{len(cal.table)} table entries)")
+        machine, table = cal.machine, cal.table
     if args.strategy == "auto":
         t0 = time.time()
         allow_cf = not args.no_cf
         if graph is not None:
-            plan = plan_lib.plan_graph(TPU_V5E, graph, specs, mesh,
+            plan = plan_lib.plan_graph(machine, graph, specs, mesh,
+                                       table=table,
                                        allow_channel_filter=allow_cf)
         else:
-            plan = plan_lib.plan_line(TPU_V5E, specs, mesh,
+            plan = plan_lib.plan_line(machine, specs, mesh, table=table,
                                       allow_channel_filter=allow_cf)
         print(f"strategy optimizer ({time.time() - t0:.2f}s):")
         print(plan.describe())
@@ -103,6 +124,9 @@ def build(args, mesh):
     else:
         from repro.models.lm import transformer as T
         from repro.models.lm.modules import ShardCtx
+        if args.calibrate:
+            logging.warning("--calibrate covers the CNN archs only; "
+                            "ignored for %s", arch)
         cfg = registry.get(arch, smoke=args.smoke)
         ctx = ShardCtx(mesh=mesh, seq_axis="model", batch_axes=ba)
         loss = functools.partial(T.loss_fn, cfg=cfg, ctx=ctx,
@@ -126,7 +150,9 @@ def build(args, mesh):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default="mesh1k",
+                    help="architecture id (registry); defaults to the "
+                         "paper's 1K mesh-tangling CNN")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--strategy", default="uniform",
                     choices=["uniform", "auto"],
@@ -139,6 +165,16 @@ def main():
     ap.add_argument("--no-cf", action="store_true",
                     help="exclude channel/filter candidates from --strategy "
                          "auto (sample/spatial only, the pre-CF behavior)")
+    ap.add_argument("--calibrate", nargs="?", const="BENCH_calibration.json",
+                    default=None, metavar="PATH",
+                    help="solve --strategy auto on measured costs: "
+                         "microbenchmark local conv at this arch's layer "
+                         "shapes plus halo/collective primitives on the "
+                         "live backend, fit Machine constants and an "
+                         "EmpiricalTable (core.calibrate), and feed them to "
+                         "the §V-C solver.  PATH (default "
+                         "BENCH_calibration.json) is loaded when it exists, "
+                         "else written — CNN archs only")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)

@@ -92,6 +92,38 @@ def human_count(n: float) -> str:
     return f"{n:.2f}Q"
 
 
+def trimmed_mean(xs: Sequence[float], trim: float = 0.2) -> float:
+    """Mean of `xs` after dropping the `trim` fraction from each tail —
+    the robust estimator every benchmark timing loop in this repo uses
+    (one slow outlier on a shared CI runner must not move the estimate)."""
+    xs = sorted(xs)
+    k = int(len(xs) * trim)
+    kept = xs[k:len(xs) - k] or xs
+    return sum(kept) / len(kept)
+
+
+def time_fn(fn, *args, reps: int = 5, warmup: int = 1,
+            trim: float = 0.2) -> float:
+    """Wall-clock seconds per call of a jax callable (the shared benchmark
+    timing loop: warmup calls absorb compilation, every timed rep blocks on
+    the result, and the per-rep samples are trimmed-mean reduced).
+
+    `benchmarks/_timing.py` re-exports this for the benchmark scripts; the
+    calibrator (core.calibrate) injects it as its default timer.
+    """
+    import time as _time
+    for _ in range(max(warmup, 1)):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    samples = []
+    for _ in range(max(reps, 1)):
+        t0 = _time.perf_counter()
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+        samples.append(_time.perf_counter() - t0)
+    return trimmed_mean(samples, trim)
+
+
 def assert_no_nans(tree: Any, where: str = "") -> None:
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         arr = np.asarray(leaf)

@@ -1,0 +1,223 @@
+"""Calibration subsystem (core.calibrate) + EmpiricalTable-path tests.
+
+All calibration runs here inject a deterministic fake timer (no kernel is
+ever executed, no wall clock is read), so the fitting/serialization logic
+is checked exactly and the tests are immune to machine noise.  The
+measured-for-real path is exercised by benchmarks/strategy_exec.py and the
+CI bench lane.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import calibrate as cal
+from repro.core import perfmodel as pm
+from repro.core.perfmodel import ConvLayer, EmpiricalTable, TPU_V5E
+from repro.core.plan import plan_line
+from repro.models.cnn import meshnet
+
+MS22 = {"data": 2, "model": 2}
+
+CFG = meshnet.MeshNetConfig("t", input_hw=32, in_channels=4,
+                            convs_per_block=1, widths=(8, 16))
+SPECS = meshnet.layer_specs(CFG, 4)
+
+
+def fake_timer(fn, *args):
+    """Deterministic stand-in for the trimmed-mean loop: seconds derived
+    from the argument sizes only (never calls `fn`)."""
+    return 2e-6 + 1e-9 * sum(int(np.prod(a.shape)) for a in args)
+
+
+# ------------------------------------------------------------ the table --
+def test_table_json_roundtrip():
+    t = EmpiricalTable({("conv", 4, 8, 32, 32, 16, 3, 1): 1.5e-4,
+                        ("pool", 4, 8, 16, 16, 8, 2, 2): 2.0e-5})
+    rows = json.loads(json.dumps(t.to_json()))     # through real JSON text
+    t2 = EmpiricalTable.from_json(rows)
+    assert t2 == t
+    layer = ConvLayer("l", n=8, c=8, h=64, w=64, f=16, k=3, s=1)
+    assert t2.lookup(layer, 4, 8, 32, 32, 16) == pytest.approx(1.5e-4)
+    assert t2.lookup(layer, 9, 9, 9, 9, 9) is None
+
+
+def test_table_shapes_cover_solver_queries():
+    """Every shape layer_cost queries for an executable candidate is a key
+    the calibrator measures — the table never misses on the solver's own
+    candidate set."""
+    from repro.core.plan import executable_candidates
+    keys = set(cal.table_shapes(SPECS, MS22))
+    probe = EmpiricalTable({k: 1e-4 for k in keys})
+    hits = {"n": 0}
+
+    class Counting(EmpiricalTable):
+        def lookup(self, layer, n, c, h, w, f):
+            t = probe.lookup(layer, n, c, h, w, f)
+            assert t is not None, (layer.name, n, c, h, w, f)
+            hits["n"] += 1
+            return t
+
+    for layer in SPECS:
+        for d in executable_candidates(layer, MS22):
+            pm.layer_cost(TPU_V5E, layer, d, MS22, Counting())
+    assert hits["n"] > 0
+
+
+# ----------------------------------------------------- calibration runs --
+def test_calibration_roundtrip(tmp_path):
+    c = cal.calibrate(SPECS, MS22, timer=fake_timer)
+    path = str(tmp_path / "BENCH_calibration.json")
+    c.save(path)
+    c2 = cal.Calibration.load(path)
+    assert c2.machine == c.machine
+    assert c2.table == c.table
+    assert c2.meta == c.meta
+    assert len(c.table) > 0
+    assert c.machine.peak_flops > 0 and c.machine.mem_bw > 0
+
+
+def test_calibration_rejects_foreign_json(tmp_path):
+    path = str(tmp_path / "not_cal.json")
+    with open(path, "w") as f:
+        json.dump({"schema": "something-else"}, f)
+    with pytest.raises(ValueError, match="schema"):
+        cal.Calibration.load(path)
+
+
+def test_calibration_deterministic_under_seeded_timings():
+    """Same specs + same (fake) timings -> bit-identical calibration JSON:
+    the pipeline adds no hidden nondeterminism of its own."""
+    c1 = cal.calibrate(SPECS, MS22, timer=fake_timer)
+    c2 = cal.calibrate(SPECS, MS22, timer=fake_timer)
+    assert c1.to_json() == c2.to_json()
+
+
+def test_load_or_run_is_idempotent(tmp_path):
+    path = str(tmp_path / "c.json")
+    c1 = cal.load_or_run(path, SPECS, MS22, timer=fake_timer)
+    # second call must load, not re-measure: a timer that explodes proves it
+    def boom(fn, *a):
+        raise AssertionError("re-measured instead of loading")
+    c2 = cal.load_or_run(path, SPECS, MS22, timer=boom)
+    assert c2.to_json() == c1.to_json()
+
+
+def test_load_warns_when_calibration_covers_foreign_network(tmp_path,
+                                                            capsys):
+    """Loading a calibration measured for a different network keeps the
+    file (analytic fallback) but warns loudly about the coverage gap."""
+    path = str(tmp_path / "c.json")
+    c = cal.load_or_run(path, SPECS, MS22, timer=fake_timer)
+    assert cal.coverage(c, SPECS, MS22) == pytest.approx(1.0)
+    other = meshnet.layer_specs(
+        meshnet.MeshNetConfig("o", input_hw=128, in_channels=6,
+                              convs_per_block=2, widths=(12, 24)), 8)
+    capsys.readouterr()
+    c2 = cal.load_or_run(path, other, MS22, timer=fake_timer)
+    out = capsys.readouterr().out
+    assert "WARNING" in out and "covers only" in out
+    assert c2.table == c.table          # loaded, not re-measured
+
+
+def test_calibrate_caps_shape_grid():
+    c = cal.calibrate(SPECS, MS22, timer=fake_timer, max_shapes=4)
+    assert len(c.table) <= 4
+    assert c.meta["shapes"]["dropped"] > 0
+    # coverage judges against what a capped run WOULD measure, so a
+    # legitimately capped self-calibration is full-coverage (no perpetual
+    # "delete the file to re-measure" false alarm)
+    assert cal.coverage(c, SPECS, MS22) == pytest.approx(1.0)
+    # the capped grid keeps the extremes of the FLOP range
+    keys = sorted(c.table.entries,
+                  key=lambda k: cal._conv_flops_bytes(k)[0])
+    all_keys = sorted(cal.table_shapes(SPECS, MS22),
+                      key=lambda k: (cal._conv_flops_bytes(k)[0], k))
+    assert keys[0] == all_keys[0] and keys[-1] == all_keys[-1]
+
+
+# ------------------------------------------------------ solver threading --
+def test_solver_with_table_and_analytic_both_executable():
+    """plan_line on measured costs and on the analytic model both return
+    complete, compiled (executable) plans with cost reports."""
+    c = cal.calibrate(SPECS, MS22, timer=fake_timer)
+    names = {l.name for l in SPECS}
+    for table in (c.table, None):
+        plan = plan_line(c.machine, SPECS, MS22, table=table)
+        assert set(plan.layers) == names
+        assert all(lp.sharding is not None for lp in plan.layers.values())
+        assert plan.predicted is not None and plan.predicted["total"] > 0
+
+
+def test_table_changes_solver_input():
+    """The measured table actually feeds the solve: pricing one candidate's
+    shapes absurdly high must steer the solver's cost for it."""
+    from repro.core.plan import executable_candidates
+    layer = ConvLayer("l", n=8, c=8, h=32, w=32, f=8, k=3, s=1)
+    slow = EmpiricalTable({k: 10.0 for k in cal.table_shapes([layer], MS22)})
+    d = executable_candidates(layer, MS22)[0]
+    with_t = pm.layer_cost(TPU_V5E, layer, d, MS22, slow).total
+    without = pm.layer_cost(TPU_V5E, layer, d, MS22, None).total
+    assert with_t > without * 100
+
+
+def test_analytic_fallback_on_missing_shapes():
+    """Shapes absent from the table fall back to the analytic roofline —
+    a partial calibration never changes results for uncovered shapes."""
+    layer = ConvLayer("l", n=8, c=8, h=32, w=32, f=8, k=3, s=1)
+    empty = EmpiricalTable({})
+    other = EmpiricalTable({("conv", 1, 1, 8, 8, 1, 3, 1): 123.0})
+    for table in (empty, other):
+        got = pm.conv_compute_time(TPU_V5E, layer, 8, 8, 32, 32, 8, table)
+        ref = pm.conv_compute_time(TPU_V5E, layer, 8, 8, 32, 32, 8, None)
+        assert got == ref
+    # and end to end: a table covering nothing solves to the analytic plan
+    foreign = EmpiricalTable({("conv", 1, 1, 8, 8, 1, 3, 1): 123.0})
+    p_t = plan_line(TPU_V5E, SPECS, MS22, table=foreign)
+    p_a = plan_line(TPU_V5E, SPECS, MS22)
+    assert all(p_t.layers[n].dist.same_as(p_a.layers[n].dist)
+               for n in p_a.layers)
+    assert p_t.predicted["total"] == pytest.approx(p_a.predicted["total"])
+
+
+# ------------------------------------------------------------- fitting --
+def test_fit_alpha_beta_recovers_planted_model():
+    alpha, beta = 3e-6, 1 / 12e9
+    rows = [(1.0, float(n), alpha + beta * n)
+            for n in (1 << 10, 1 << 14, 1 << 18, 1 << 22)]
+    a, b = cal._fit_alpha_beta(rows, (9e-9, 9e-14))
+    assert a == pytest.approx(alpha, rel=1e-6)
+    assert b == pytest.approx(beta, rel=1e-6)
+    # degenerate systems keep the fallback
+    assert cal._fit_alpha_beta([], (1e-6, 1e-10)) == (1e-6, 1e-10)
+    assert cal._fit_alpha_beta([(1.0, 5.0, 1.0)], (1e-6, 1e-10)) == \
+        (1e-6, 1e-10)
+
+
+def test_fit_compute_recovers_planted_roofline():
+    peak, eff, half = 1e12, 0.5, 2e9
+    fls = [1e8, 1e9, 1e10, 1e11]
+    samples = [(fl, (fl + half) / (eff * peak) + pm.LAUNCH_OVERHEAD)
+               for fl in fls]
+    # the planted peak*eff is recoverable up to the achieved-peak anchor
+    # (peak is pinned at the best *achieved* rate, which sits below the
+    # asymptote, so eff clamps at 1.0 and the product lands a few % off)
+    p, e, h = cal._fit_compute(samples, cal.HOST_BASE)
+    assert p * e == pytest.approx(peak * eff, rel=0.05)
+    assert h == pytest.approx(half, rel=0.05)
+
+
+def test_comm_sizes_and_representative_subset():
+    p2p, coll = cal.comm_sizes(SPECS, MS22)
+    assert p2p and coll and all(b > 0 for b in p2p + coll)
+    sub = cal._representative(coll, 3)
+    assert len(sub) <= 3
+    assert sub[0] == min(coll) and sub[-1] == max(coll)
+    assert cal._representative([7], 3) == [7]
+
+
+def test_machine_json_roundtrip():
+    m = dataclasses.replace(TPU_V5E, name="x", eff_halfwork=1.5e9)
+    m2 = pm.Machine(**json.loads(json.dumps(dataclasses.asdict(m))))
+    assert m2 == m
