@@ -19,7 +19,12 @@ uploads it and later runs reuse it), then three workloads execute:
     cost terms (reduce-scatter fwd, all-gather BPw) against the
     core.channel_conv runtime, and A/Bs auto-with-CF vs auto-no-CF;
   * mesh2k_proxy — the 2K mesh-tangling geometry (5 convs/block) at
-    reduced resolution under the 2-D H x W spatial decomposition.
+    reduced resolution under the 2-D H x W spatial decomposition;
+  * mesh16_proxy — the 16x16-mesh decompositions at bench scale (batch 1,
+    so sample parallelism is impossible): the solved plan mixes
+    CF x spatial layers (CF collective + halo in one shard_map) and
+    H split over the *product* of both mesh axes (core.halo), vs the
+    uniform H x W baseline.
 
 Output is both the legacy `name,us_per_call,derived` CSV rows and a
 machine-readable BENCH_strategy.json: per-workload measured/predicted step
@@ -164,14 +169,22 @@ def run(args) -> int:
     cfg2k = meshnet.MeshNetConfig("bench2k", input_hw=64, in_channels=8,
                                   convs_per_block=5, widths=(16, 32),
                                   bn_scope="global")
+    cfg16p = meshnet.MeshNetConfig("bench16p", input_hw=32, in_channels=8,
+                                   convs_per_block=1, widths=(16, 32, 64),
+                                   bn_scope="global")
     specs128 = meshnet.layer_specs(cfg128, 2)
     specs16 = meshnet.layer_specs(cfg16, 2)
     specs2k = meshnet.layer_specs(cfg2k, 1)
+    specs16p = meshnet.layer_specs(cfg16p, 1)
 
     # --- calibrate the cost inputs on the live backend (§V, measured) ----
+    # grow_table: a calibration restored from the CI cache (or a previous
+    # local run) is extended with any shard shapes these workloads add,
+    # instead of silently degrading to the analytic model for them
     union = list(specs128) + list(specs16) + \
-        (list(specs2k) if data > 1 else [])
-    cal = calib.load_or_run(args.calibration, union, mesh, reps=args.reps)
+        (list(specs2k) + list(specs16p) if data > 1 else [])
+    cal = calib.load_or_run(args.calibration, union, mesh, reps=args.reps,
+                            grow_table=True)
     machine, table = cal.machine, cal.table
 
     workloads = {}
@@ -222,6 +235,33 @@ def run(args) -> int:
                                    machine, table)),
              ("auto", auto)),
             mesh, args.reps, args.rounds, "hxw", "auto", agree)
+
+    # --- mesh16_proxy: the 16x16-mesh decompositions at bench scale.
+    # Batch 1 rules out sample parallelism, so the solver composes: CF on
+    # one axis with H on the other (one shard_map: halo + CF collective)
+    # and H over the *product* of both axes where channels are thin.  The
+    # auto plan must hold the ordering promise against uniform H x W. ----
+    if data > 1:
+        names = meshnet.layer_names(cfg16p)
+        hw_sh = ConvSharding(batch_axes=(), h_axis="model", w_axis="data")
+        auto, agree = _solver_agreement(plan_lib, machine, table, specs16p,
+                                        mesh)
+        n_cfsp = sum(isinstance(lp.sharding, CFSharding)
+                     and lp.sharding.is_spatial
+                     for lp in auto.layers.values())
+        n_multi = sum(len(lp.sharding.h_axes) > 1
+                      or len(lp.sharding.w_axes) > 1
+                      for lp in auto.layers.values())
+        print(f"# mesh16_proxy auto plan: {n_cfsp} CF x spatial layers, "
+              f"{n_multi} product-axis spatial layers")
+        workloads["mesh16_proxy"] = _bench_workload(
+            "mesh16_proxy", cfg16p, 1, specs16p,
+            (("uniform", _uniform_plan(plan_lib, hw_sh, names, specs16p,
+                                       mesh, machine, table)),
+             ("auto", auto)),
+            mesh, args.reps, args.rounds, "uniform", "auto", agree)
+        workloads["mesh16_proxy"]["n_cf_spatial_layers"] = n_cfsp
+        workloads["mesh16_proxy"]["n_product_axis_layers"] = n_multi
 
     # --- the gate: the optimizer's ordering promise ----------------------
     tol = args.gate_tol

@@ -56,6 +56,30 @@ mixed = plan_lib.compile_plan(
 print("\nhand-mixed spatial + CF plan on the same 2x2 mesh:")
 print(mixed.describe())
 
+# --- a 16-device (4x2x2) mesh: the decompositions 16x16 meshes need ------
+# Two families unlocked by the product-axis halo (core.halo) and the
+# CF x spatial composition (core.channel_conv):
+#   * H split over a *tuple* of mesh axes — one linearized product axis, so
+#     ('data','model') behaves like a single 4-way spatial axis;
+#   * CF on one axis composed with spatial sharding on others — the halo
+#     exchange and the CF collective live inside ONE shard_map.
+MS16 = {"pod": 4, "data": 2, "model": 2}
+auto16 = plan_lib.plan_line(machine, layers, MS16)
+print("\nsolved plan for a hypothetical 16-device (4x2x2) mesh:")
+print(auto16.describe())
+
+mixed16 = plan_lib.compile_plan(
+    {"conv1_1": Dist("s+h2", {"N": ("pod",), "H": ("data", "model")}),
+     "conv2_1": Dist("cf*h", {"N": ("pod",), "H": ("data",),
+                              "C": ("model",), "F": ("model",)}),
+     "conv3_1": Dist("cf*h", {"N": ("pod",), "H": ("data",),
+                              "C": ("model",), "F": ("model",)}),
+     "pred": Dist("s+h2", {"N": ("pod",), "H": ("data", "model")})},
+    layers, MS16, machine=machine)
+print("\nhand-mixed sample + two-axis-spatial + CF x spatial plan "
+      "(consecutive CF layers chain; each family change is one reshard):")
+print(mixed16.describe())
+
 # --- solve + compile for THIS machine's devices, then execute it ---------
 mesh = make_mesh(data=1, model=jax.device_count())
 plan = plan_lib.plan_line(machine, layers, mesh)

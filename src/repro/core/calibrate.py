@@ -463,27 +463,63 @@ def calibrate(specs: Sequence[ConvLayer], mesh, *,
                        meta=meta)
 
 
-def coverage(cal: Calibration, specs: Sequence[ConvLayer],
-             mesh_shape: Mapping[str, int]) -> float:
-    """Fraction of the table keys a fresh calibration of `specs` over
-    `mesh_shape` — run with `cal`'s own settings (shape cap, candidate
-    flags) — would measure that `cal`'s table actually holds.  Judging
-    against what a run *would measure* (not the full candidate set) means
-    a legitimately capped self-calibration scores 1.0, while a table
-    measured for a different network or mesh scores near 0."""
+def _chosen_shapes_for(cal: Calibration, specs: Sequence[ConvLayer],
+                       mesh_shape: Mapping[str, int]) -> list[tuple]:
+    """The conv-shape grid a fresh calibration of `specs` over `mesh_shape`
+    would measure under `cal`'s own stored settings (shape cap, candidate
+    flags) — the single definition both `coverage` and `grow` judge
+    against, so the growth policy and the coverage warning cannot drift."""
     m = cal.meta
     wanted = table_shapes(specs, mesh_shape,
                           allow_w_split=m.get("allow_w_split", True),
                           allow_channel_filter=m.get("allow_channel_filter",
                                                      True))
-    chosen = _choose_shapes(wanted, int(m.get("max_shapes", 64)))
+    return _choose_shapes(wanted, int(m.get("max_shapes", 64)))
+
+
+def coverage(cal: Calibration, specs: Sequence[ConvLayer],
+             mesh_shape: Mapping[str, int]) -> float:
+    """Fraction of the table keys a fresh calibration of `specs` over
+    `mesh_shape` — run with `cal`'s own settings — would measure that
+    `cal`'s table actually holds.  Judging against what a run *would
+    measure* (not the full candidate set) means a legitimately capped
+    self-calibration scores 1.0, while a table measured for a different
+    network or mesh scores near 0."""
+    chosen = _chosen_shapes_for(cal, specs, mesh_shape)
     if not chosen:
         return 1.0
     return sum(k in cal.table.entries for k in chosen) / len(chosen)
 
 
-def load_or_run(path: str, specs: Sequence[ConvLayer], mesh,
-                **kwargs) -> Calibration:
+def grow(cal: Calibration, specs: Sequence[ConvLayer], mesh, *,
+         reps: int = 5, timer: Timer | None = None) -> int:
+    """Measure the conv shapes a calibration of `specs`/`mesh` would pick
+    that `cal`'s table is missing, and merge them in — the cross-run table
+    growth the CI bench lane relies on (the cached BENCH_calibration.json
+    accumulates shard shapes across pushes instead of being re-measured).
+    Machine constants are kept: they are shape-independent fits and
+    re-fitting them from a partial sample would only add noise.  Returns
+    the number of entries added."""
+    if timer is None:
+        timer = lambda fn, *a: time_fn(fn, *a, reps=reps)   # noqa: E731
+    mesh_shape = _mesh_shape_of(mesh)
+    chosen = _chosen_shapes_for(cal, specs, mesh_shape)
+    missing = [k for k in chosen if k not in cal.table.entries]
+    added = 0
+    for key in missing:
+        t = _bench_conv_shape(key, timer)
+        if t is not None:
+            cal.table.entries[key] = t
+            added += 1
+    if added:
+        grown = cal.meta.setdefault("grown", [])
+        grown.append({"layers": [l.name for l in specs],
+                      "mesh": dict(mesh_shape), "added": added})
+    return added
+
+
+def load_or_run(path: str, specs: Sequence[ConvLayer], mesh, *,
+                grow_table: bool = False, **kwargs) -> Calibration:
     """Load a calibration from `path` when it exists, else run one over
     `specs`/`mesh` and save it there — the one-liner train.py and the
     benchmarks use to make `--calibrate` idempotent across runs.
@@ -492,15 +528,26 @@ def load_or_run(path: str, specs: Sequence[ConvLayer], mesh,
     measured for a different network or mesh mostly misses and silently
     degrades to the analytic model, so low coverage gets a loud warning
     (not an error — a TPU-measured table driving a dry run is legitimate).
+    With `grow_table=True` the missing shard shapes are measured on the
+    live backend instead and merged back into `path`, so a cached table
+    (CI's actions/cache) accumulates coverage across runs.
     """
     if path and os.path.exists(path):
         cal = Calibration.load(path)
         print(f"calibration loaded from {path}: {cal.summary()}")
         mesh_shape = _mesh_shape_of(mesh)
-        cov = coverage(cal, specs, mesh_shape)
         if cal.meta.get("mesh") not in (None, dict(mesh_shape)):
             print(f"calibrate: WARNING: {path} was measured on mesh "
                   f"{cal.meta['mesh']}, not {dict(mesh_shape)}")
+        if grow_table:
+            added = grow(cal, specs, mesh,
+                         reps=kwargs.get("reps", 5),
+                         timer=kwargs.get("timer"))
+            if added:
+                cal.save(path)
+                print(f"calibrate: grew {path} by {added} table entries "
+                      f"({len(cal.table)} total)")
+        cov = coverage(cal, specs, mesh_shape)
         if cov < 0.5:
             print(f"calibrate: WARNING: {path} covers only {cov:.0%} of "
                   f"this network's shard shapes — the rest falls back to "

@@ -1,13 +1,24 @@
 """Halo exchange — the paper's core communication primitive (§III-A, §IV).
 
-A tensor dimension is block-partitioned across a named mesh axis; each shard
-needs `lo` trailing rows of its predecessor and `hi` leading rows of its
-successor (a stencil halo).  On TPU this lowers to `collective-permute` on the
-ICI torus — the native neighbor-exchange pattern.
+A tensor dimension is block-partitioned across a named mesh axis — or a
+*tuple* of mesh axes forming one product axis (how 16x16 meshes split H over
+two torus dimensions) — and each shard needs `lo` trailing rows of its
+predecessor and `hi` leading rows of its successor (a stencil halo).  On TPU
+this lowers to `collective-permute` on the ICI torus — the native
+neighbor-exchange pattern.
 
 ``jax.lax.ppermute`` fills shards that receive nothing with zeros, which
 implements the paper's "same" zero padding at the global boundary for free
 (Eq. 1's out-of-range indices).
+
+Product axes: when `axis_name` is a tuple, shard identity is the linearized
+index over the named axes, major-to-minor in tuple order — the same
+convention ``PartitionSpec((a, b))`` uses to lay blocks out — so the i -> i+1
+neighbor permutation crosses axis boundaries correctly: the last shard of an
+inner-axis row sends to the first shard of the next outer-axis row, exactly
+as if H were split over one axis of the product size.  ``lax.ppermute`` and
+``lax.axis_index`` both accept the tuple natively and agree on this
+linearization.
 
 These functions must be called inside ``shard_map`` (they use collectives on
 `axis_name`).  They are fully differentiable: the VJP of ppermute is ppermute
@@ -16,6 +27,8 @@ backward halo pattern (halo exchange on dL/dy, send-back-and-accumulate of
 boundary gradients).
 """
 from __future__ import annotations
+
+from typing import Mapping
 
 import jax
 import jax.numpy as jnp
@@ -30,12 +43,32 @@ def _bwd_perm(n: int):  # shard i -> i-1  (send my head upward)
     return [(i + 1, i) for i in range(n - 1)]
 
 
-def halo_slices(x, dim: int, lo: int, hi: int, axis_name: str, axis_size: int):
+def axes_tuple(axis_name) -> tuple[str, ...]:
+    """Normalize an axis spec (None | str | tuple of str) to a tuple."""
+    if axis_name is None:
+        return ()
+    if isinstance(axis_name, str):
+        return (axis_name,)
+    return tuple(axis_name)
+
+
+def product_size(axis_name, mesh_shape: Mapping[str, int]) -> int:
+    """Total shard count of a (possibly product) axis under `mesh_shape`."""
+    n = 1
+    for a in axes_tuple(axis_name):
+        n *= mesh_shape[a]
+    return n
+
+
+def halo_slices(x, dim: int, lo: int, hi: int, axis_name, axis_size: int):
     """Return (halo_lo, halo_hi) received from the neighbor shards.
 
     halo_lo: the last `lo` rows of the predecessor shard (zeros on shard 0).
     halo_hi: the first `hi` rows of the successor shard (zeros on the last).
     Either may be None when the corresponding width is 0.
+
+    `axis_name` may be one mesh axis or a tuple of axes treated as a single
+    product axis of total size `axis_size` (see module docstring).
     """
     halo_lo = halo_hi = None
     if lo > 0:
@@ -47,13 +80,15 @@ def halo_slices(x, dim: int, lo: int, hi: int, axis_name: str, axis_size: int):
     return halo_lo, halo_hi
 
 
-def halo_exchange(x, dim: int, lo: int, hi: int, axis_name: str,
+def halo_exchange(x, dim: int, lo: int, hi: int, axis_name,
                   axis_size: int, edge_value: float = 0.0):
     """Extend local block `x` along `dim` with its halo: (lo + local + hi).
 
     `edge_value` is the fill at the *global* boundary (shard 0's lo-halo and
     the last shard's hi-halo).  ppermute already yields zeros there; for a
     non-zero fill (e.g. -inf for max pooling) the edge shards overwrite it.
+    `axis_name` may be a tuple (product axis); the boundary test then uses
+    the linearized shard index, which axis_index computes for tuples.
     """
     halo_lo, halo_hi = halo_slices(x, dim, lo, hi, axis_name, axis_size)
     if halo_lo is not None and edge_value:

@@ -70,11 +70,18 @@ TPU_V5E = Machine("tpu-v5e", peak_flops=197e12, mem_bw=819e9,
 # communication (paper §II-B; Thakur et al. collectives)
 # ---------------------------------------------------------------------------
 
-def sr_time(m: Machine, nbytes: float) -> float:
-    """SR(n): send+receive n bytes between two processors (full duplex)."""
+def sr_time(m: Machine, nbytes: float, hops: int = 1) -> float:
+    """SR(n): send+receive n bytes between two processors (full duplex).
+
+    `hops`: link hops the message traverses.  1 for torus neighbors; a
+    spatial dim split over a *product* of mesh axes (core.halo) pays more —
+    the boundary-crossing sends of the linearized neighbor pattern travel
+    across the outer torus dimension — so callers pass the number of axes
+    in the product.  Latency scales with hops; bandwidth stays per-link
+    (wormhole routing)."""
     if nbytes <= 0:
         return 0.0
-    return m.alpha + m.beta * nbytes
+    return max(hops, 1) * m.alpha + m.beta * nbytes
 
 
 def allreduce_time(m: Machine, p: int, nbytes: float) -> float:
@@ -222,18 +229,22 @@ class LayerCost:
 
 
 def _halo_time(m: Machine, o: int, n_l: int, c_l: int, h_l: int, w_l: int,
-               h_split: bool, w_split: bool) -> float:
-    """2 SR(O·n·c·w) + 2 SR(O·n·c·h) + 4 SR(O²·n·c) as applicable (§V-A)."""
+               h_hops: int, w_hops: int) -> float:
+    """2 SR(O·n·c·w) + 2 SR(O·n·c·h) + 4 SR(O²·n·c) as applicable (§V-A).
+
+    `h_hops`/`w_hops`: 0 when the dim is unsplit; else the number of mesh
+    axes in its (possibly product) split — product-axis halos pay extra
+    link hops on the boundary-crossing sends (see sr_time)."""
     if o == 0:
         return 0.0
     t = 0.0
     ws = m.wordsize
-    if h_split:
-        t += 2 * sr_time(m, o * n_l * c_l * w_l * ws)
-    if w_split:
-        t += 2 * sr_time(m, o * n_l * c_l * h_l * ws)
-    if h_split and w_split:
-        t += 4 * sr_time(m, o * o * n_l * c_l * ws)
+    if h_hops:
+        t += 2 * sr_time(m, o * n_l * c_l * w_l * ws, h_hops)
+    if w_hops:
+        t += 2 * sr_time(m, o * n_l * c_l * h_l * ws, w_hops)
+    if h_hops and w_hops:
+        t += 4 * sr_time(m, o * o * n_l * c_l * ws, h_hops + w_hops)
     return t
 
 
@@ -248,8 +259,11 @@ def layer_cost(m: Machine, layer: ConvLayer, dist: Dist,
     w_l = layer.w // max(dist.ways("W", mesh_shape), 1)
     c_l = layer.c // max(dist.ways("C", mesh_shape), 1)
     f_l = layer.f // max(dist.ways("F", mesh_shape), 1)
-    h_split = dist.ways("H", mesh_shape) > 1
-    w_split = dist.ways("W", mesh_shape) > 1
+    # hop counts for the halo terms: the number of mesh axes each spatial
+    # dim is split over (0 = unsplit) — a product-axis split's boundary
+    # messages cross the outer torus dimension (see sr_time).
+    h_hops = len(dist.axes("H")) if dist.ways("H", mesh_shape) > 1 else 0
+    w_hops = len(dist.axes("W")) if dist.ways("W", mesh_shape) > 1 else 0
 
     c = LayerCost()
     # Channel/filter parallelism (§III-D) is costed as the single-axis
@@ -267,10 +281,18 @@ def layer_cost(m: Machine, layer: ConvLayer, dist: Dist,
     f_fwd = layer.f if p_c > 1 else f_l
     fp_comp = conv_compute_time(m, layer, n_l, c_l, h_l, w_l, f_fwd, table,
                                 eff)
-    halo_x = _halo_time(m, layer.o, n_l, c_l, h_l, w_l, h_split, w_split)
+    halo_x = _halo_time(m, layer.o, n_l, c_l, h_l, w_l, h_hops, w_hops)
     if p_c > 1:
-        halo_x += reduce_scatter_time(
-            m, p_c, n_l * layer.f * h_out_l * w_out_l * m.wordsize)
+        # the CF data collective runs at the *sub-mesh* size p_c with the
+        # spatially-local payload (h_out_l/w_out_l already divide out any
+        # composed H/W split).  The runtime executes whichever §III-D mode
+        # moves fewer words — RS(y) in 'channel' mode vs AG(x) in 'filter'
+        # mode (core.plan picks it with cf_mode_for) — so the forward term
+        # prices that min and the costed plan matches the executed one.
+        words = cf_collective_words(layer, dist, mesh_shape)
+        halo_x += min(
+            reduce_scatter_time(m, p_c, words["rs_y"] * m.wordsize),
+            all_gather_time(m, p_c, words["ag_x"] * m.wordsize))
     c.fp_compute = fp_comp
     c.fp = max(fp_comp, halo_x) if overlap else fp_comp + halo_x
 
@@ -282,11 +304,14 @@ def layer_cost(m: Machine, layer: ConvLayer, dist: Dist,
 
     # BPx: halo on dL/dy (F channels) + data-conv compute; under filter
     # parallelism the sum over f ∈ I_F^(p) (Eq. 3) is completed with a
-    # reduce-scatter across the F-group, mirroring the forward.
+    # reduce-scatter across the F-group, mirroring the forward.  (The
+    # backward CF terms below charge both the x-payload RS and the
+    # y-payload AG; each mode actually pays only one of them, so backward
+    # is priced as an upper bound across modes.)
     c_bpx = layer.c if p_f > 1 else c_l
     bpx_comp = conv_compute_time(m, layer, n_l, c_bpx, h_l, w_l, f_l, table,
                                  eff)
-    halo_dy = _halo_time(m, layer.o, n_l, f_l, h_l, w_l, h_split, w_split)
+    halo_dy = _halo_time(m, layer.o, n_l, f_l, h_l, w_l, h_hops, w_hops)
     if p_f > 1:
         halo_dy += reduce_scatter_time(
             m, p_f, n_l * layer.c * h_l * w_l * m.wordsize)
@@ -316,6 +341,32 @@ def layer_cost(m: Machine, layer: ConvLayer, dist: Dist,
     c.bpa = allreduce_time(m, p_ar,
                            f_l * c_l * layer.k ** 2 * m.wordsize)
     return c
+
+
+def cf_collective_words(layer: ConvLayer, dist: Dist,
+                        mesh_shape: Mapping[str, int]) -> dict:
+    """Payload sizes (words) of the two §III-D data collectives at the
+    local shard shapes: 'filter' mode all-gathers x over the CF group,
+    'channel' mode reduce-scatters y.  Both run at the sub-mesh size
+    `p_cf`; any composed H/W split divides the spatial extents out.  The
+    plan compiler picks the runtime mode with the smaller payload."""
+    n_l = layer.n // max(dist.ways("N", mesh_shape), 1)
+    h_l = layer.h // max(dist.ways("H", mesh_shape), 1)
+    w_l = layer.w // max(dist.ways("W", mesh_shape), 1)
+    h_out_l = layer.h_out // max(dist.ways("H", mesh_shape), 1)
+    w_out_l = layer.w_out // max(dist.ways("W", mesh_shape), 1)
+    return {"ag_x": n_l * layer.c * h_l * w_l,
+            "rs_y": n_l * layer.f * h_out_l * w_out_l,
+            "p_cf": dist.ways("C", mesh_shape)}
+
+
+def cf_mode_for(layer: ConvLayer, dist: Dist,
+                mesh_shape: Mapping[str, int]) -> str:
+    """'filter' when the AG(x) payload is smaller than the RS(y) payload,
+    else 'channel' — the per-layer mode rule the solver applies (the
+    ROADMAP PR-2 leftover: stop picking CF mode blindly)."""
+    words = cf_collective_words(layer, dist, mesh_shape)
+    return "filter" if words["ag_x"] < words["rs_y"] else "channel"
 
 
 def shuffle_time(m: Machine, layer: ConvLayer, d_i: Dist, d_j: Dist,

@@ -50,7 +50,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.channel_conv import CFSharding
 from repro.core.distribution import Dist
 from repro.core.perfmodel import (ConvLayer, EmpiricalTable, Machine,
-                                  network_cost)
+                                  cf_mode_for, network_cost)
 from repro.core.spatial_conv import ConvSharding
 from repro.core.strategy import candidate_dists, solve_dag, solve_line
 
@@ -86,59 +86,66 @@ def _dist_str(d: Dist) -> str:
     return f"{d.name!r} ({dims or 'replicated'})"
 
 
+def _spatial_axis(axes: tuple[str, ...]):
+    """A spatial dim's runtime axis spec: None / bare axis / product tuple
+    (core.halo's linearized product-axis convention for multi-axis splits,
+    the 16x16-mesh case)."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
 def dist_to_sharding(d: Dist, mesh_shape: Mapping[str, int],
                      layer: str | None = None):
     """Lower a Dist to its runtime sharding descriptor, or raise PlanError.
 
-    Sample (N) and spatial (H and/or W, one mesh axis each) distributions
-    lower to `ConvSharding`; channel/filter distributions (§III-D, C and F
-    paired on one mesh axis) lower to `CFSharding` (core.channel_conv).
-    `layer` (when known) names the offending layer in diagnostics.
+    Sample (N) and spatial distributions — H and/or W, each over one mesh
+    axis or a *product* of axes (core.halo) — lower to `ConvSharding`;
+    channel/filter distributions (§III-D, C and F paired on one mesh axis),
+    optionally composed with spatial sharding on different axes, lower to
+    `CFSharding` (core.channel_conv).  `layer` (when known) names the
+    offending layer in diagnostics.
     """
     d = normalize_dist(d, mesh_shape)
     who = f"layer {layer!r}: " if layer else ""
     c_ax, f_ax = d.axes("C"), d.axes("F")
+    h_ax, w_ax = d.axes("H"), d.axes("W")
     if c_ax or f_ax:
-        if d.axes("H") or d.axes("W"):
-            raise PlanError(
-                f"{who}dist {_dist_str(d)} combines channel/filter with "
-                "spatial sharding — the CF runtime (core.channel_conv) "
-                "keeps H and W whole; nearest executable demotion: "
-                f"{_dist_str(_demoted(d, {'N', 'C', 'F'}))}")
         if c_ax != f_ax:
             raise PlanError(
                 f"{who}dist {_dist_str(d)} shards C over {c_ax} but F over "
                 f"{f_ax} — the CF runtime pairs C and F on the same mesh "
                 "axis (layer i's F-shard is layer i+1's C-shard); nearest "
                 "executable demotion: "
-                f"{_dist_str(_demoted(d, {'N'}))}")
+                f"{_dist_str(_demoted(d, {'N', 'H', 'W'}))}")
         if len(c_ax) > 1:
             raise PlanError(
                 f"{who}dist {_dist_str(d)} shards C/F over {c_ax} — the CF "
                 "runtime supports one mesh axis per group; nearest "
                 "executable demotion: "
-                f"{_dist_str(_demoted(d, {'N'}))}")
-        unknown = set(d.dims) - {"N", "C", "F"}
+                f"{_dist_str(_demoted(d, {'N', 'H', 'W'}))}")
+        if c_ax[0] in h_ax + w_ax:
+            raise PlanError(
+                f"{who}dist {_dist_str(d)} puts the CF group and a spatial "
+                f"dim on the same mesh axis {c_ax[0]!r} — the composed "
+                "runtime needs the halo exchange and the CF collective on "
+                "different axes; nearest executable demotion: "
+                f"{_dist_str(_demoted(d, {'N', 'H', 'W'}))}")
+        unknown = set(d.dims) - {"N", "C", "F", "H", "W"}
         if unknown:
             raise PlanError(f"{who}dist {_dist_str(d)} shards non-CNN dims "
                             f"{unknown}")
-        return CFSharding(batch_axes=d.axes("N"), cf_axis=c_ax[0])
-    for dim in ("H", "W"):
-        if len(d.axes(dim)) > 1:
-            raise PlanError(
-                f"{who}dist {_dist_str(d)} shards {dim} over {d.axes(dim)} "
-                "— the runtime supports one mesh axis per spatial dim; "
-                "nearest executable demotion: "
-                f"{_dist_str(Dist(d.name + '-demoted', {**dict(d.dims), dim: d.axes(dim)[:1]}))}")
+        return CFSharding(batch_axes=d.axes("N"), cf_axis=c_ax[0],
+                          h_axis=_spatial_axis(h_ax),
+                          w_axis=_spatial_axis(w_ax))
     unknown = set(d.dims) - {"N", "H", "W"}
     if unknown:
         raise PlanError(f"{who}dist {_dist_str(d)} shards non-CNN dims "
                         f"{unknown}; nearest executable demotion: "
                         f"{_dist_str(_demoted(d, {'N', 'H', 'W'}))}")
-    h, w = d.axes("H"), d.axes("W")
     return ConvSharding(batch_axes=d.axes("N"),
-                        h_axis=h[0] if h else None,
-                        w_axis=w[0] if w else None)
+                        h_axis=_spatial_axis(h_ax),
+                        w_axis=_spatial_axis(w_ax))
 
 
 def is_executable(d: Dist, mesh_shape: Mapping[str, int]) -> bool:
@@ -155,9 +162,12 @@ def executable_candidates(layer: ConvLayer, mesh_shape: Mapping[str, int],
     """The §V-C candidate set restricted to runtime-executable dists.
 
     Channel/filter candidates (§III-D) are included by default now that
-    core.channel_conv executes them; the C/F+spatial combinations the CF
-    runtime rejects are filtered out here, so the solver only ever sees
-    what it can run.  Never empty: a fully replicated layer is always
+    core.channel_conv executes them — including CF x spatial compositions
+    (CF on one axis, H/W on others) and spatial dims split over *products*
+    of mesh axes (core.halo), the hybrids 16x16 meshes need.  The few
+    combinations the runtime still rejects (C and F on different axes,
+    multi-axis CF groups) are filtered out here, so the solver only ever
+    sees what it can run.  Never empty: a fully replicated layer is always
     executable (the solver then pays pure redundancy for it, which
     correctly prices it out whenever any parallel candidate exists).
     """
@@ -173,14 +183,12 @@ def _sharding_to_dist(sh, name: str = "uniform") -> Dist:
     dims: dict[str, tuple[str, ...]] = {}
     if sh.batch_axes:
         dims["N"] = tuple(sh.batch_axes)
-    if isinstance(sh, CFSharding):
-        if sh.cf_axis:
-            dims["C"] = dims["F"] = (sh.cf_axis,)
-        return Dist(name, dims)
-    if sh.h_axis:
-        dims["H"] = (sh.h_axis,)
-    if sh.w_axis:
-        dims["W"] = (sh.w_axis,)
+    if sh.h_axes:
+        dims["H"] = sh.h_axes
+    if sh.w_axes:
+        dims["W"] = sh.w_axes
+    if isinstance(sh, CFSharding) and sh.cf_axis:
+        dims["C"] = dims["F"] = (sh.cf_axis,)
     return Dist(name, dims)
 
 
@@ -280,14 +288,12 @@ class NetworkPlan:
             parts = []
             if sh.batch_axes:
                 parts.append(f"N:{','.join(sh.batch_axes)}")
-            if isinstance(sh, CFSharding):
-                if sh.cf_axis:
-                    parts.append(f"CF:{sh.cf_axis}({sh.mode})")
-            else:
-                if sh.h_axis:
-                    parts.append(f"H:{sh.h_axis}")
-                if sh.w_axis:
-                    parts.append(f"W:{sh.w_axis}")
+            if sh.h_axes:
+                parts.append(f"H:{'x'.join(sh.h_axes)}")
+            if sh.w_axes:
+                parts.append(f"W:{'x'.join(sh.w_axes)}")
+            if isinstance(sh, CFSharding) and sh.cf_axis:
+                parts.append(f"CF:{sh.cf_axis}({sh.mode})")
             lay = " ".join(parts) or "replicated"
             note = f"   [{lp.note}]" if lp.note else ""
             rows.append(f"  {lp.name:20s} {tag}{lay}{note}")
@@ -358,27 +364,34 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
                 f"{n_ways}-way {_dist_str(d)}; nearest executable "
                 f"demotion: {_dist_str(_demoted(d, set(d.dims) - {'N'}))}")
         note = ""
+        # the §III-A geometry fit applies to both descriptor kinds now that
+        # CFSharding may compose spatial axes: record any demotion so the
+        # executed and costed plans stay identical.
+        fitted = sh.fit(spec.h, spec.w, spec.k, spec.s, gm) if gm else sh
+        if fitted != sh:
+            dropped = [ax for ax in ("h_axis", "w_axis")
+                       if getattr(sh, ax) and not getattr(fitted, ax)]
+            note = (f"demoted {'/'.join(dropped)}: "
+                    f"{spec.h}x{spec.w} shard vs k={spec.k},s={spec.s}")
+            sh = fitted
+            d = _sharding_to_dist(sh, d.name + "-demoted")
         if isinstance(sh, CFSharding):
             if not sh.fits_channels(spec.c, spec.f, mesh_shape):
                 # the CF edge case: channel counts must divide the mesh
-                # axis; demote to the sample-parallel remainder at compile
+                # axis; demote to the sample/spatial remainder at compile
                 # time and record it so the cost report stays honest.
                 ways = mesh_shape.get(sh.cf_axis, 1)
-                note = (f"demoted C/F: {spec.c}->{spec.f} channels vs "
-                        f"{ways}-way {sh.cf_axis}")
-                d = _demoted(d, {"N"})
+                note = (note + "; " if note else "") + (
+                    f"demoted C/F: {spec.c}->{spec.f} channels vs "
+                    f"{ways}-way {sh.cf_axis}")
+                d = _demoted(d, {"N", "H", "W"})
                 sh = dist_to_sharding(d, mesh_shape, layer=spec.name)
-        else:
-            fitted = sh.fit(spec.h, spec.w, spec.k, spec.s, gm) if gm else sh
-            if fitted != sh:
-                # the ConvSharding.fit edge case (§III-A): record the
-                # demotion so the executed and costed plans stay identical.
-                dropped = [ax for ax in ("h_axis", "w_axis")
-                           if getattr(sh, ax) and not getattr(fitted, ax)]
-                note = (f"demoted {'/'.join(dropped)}: "
-                        f"{spec.h}x{spec.w} shard vs k={spec.k},s={spec.s}")
-                sh = fitted
-                d = _sharding_to_dist(sh, d.name + "-demoted")
+            else:
+                # per-layer 'filter' vs 'channel' pick: the runtime executes
+                # whichever §III-D collective moves fewer words — AG(x) vs
+                # RS(y) at the sub-mesh shard shapes (perfmodel).
+                sh = dataclasses.replace(
+                    sh, mode=cf_mode_for(spec, d, mesh_shape))
         if graph is not None:
             preds = [final[p] for p in graph.predecessors(spec.name)
                      if p in final]

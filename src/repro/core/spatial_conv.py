@@ -2,6 +2,9 @@
 
 The input tensor (NHWC) is block-partitioned: N over the data axes (sample
 parallelism), H — and optionally W — over mesh axes (spatial parallelism).
+Each of H and W may be split over a *tuple* of mesh axes treated as one
+product axis (core.halo's linearized-index convention) — the decomposition
+16x16 meshes need when a single torus dimension is not enough ways.
 Forward convolution needs a stencil halo of the neighbor shards' boundary
 rows (paper Eq. 1 with restricted index sets); the halo exchange lowers to
 ``collective-permute`` on the TPU ICI torus.
@@ -29,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence
+from typing import Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -42,20 +45,57 @@ from repro.utils import cdiv, same_pads, shard_map
 DIMNUMS = ("NHWC", "HWIO", "NHWC")
 
 
+def cast_to_weight_dtype(x, w):
+    """The repo-wide mixed-precision rule for conv layers: compute in the
+    *weight* dtype.  Both conv runtimes (spatial_conv2d, channel_conv's
+    cf_conv2d) apply this same rule, so a mixed sample/spatial/CF plan can
+    never change numerics at a reshard boundary — every layer sees x in
+    params' dtype regardless of which decomposition executes it."""
+    return x.astype(w.dtype) if x.dtype != w.dtype else x
+
+
+def fit_spatial_axis(size: int, axis, k: int, s: int,
+                     mesh_shape: Mapping[str, int]):
+    """The §III-A geometry test for one (possibly product) spatial axis:
+    keep it only when every shard divides evenly, stays stride-aligned, and
+    is at least kernel-sized; else None (the layer's spatial split demotes
+    and the distribution change becomes a §III-C shuffle)."""
+    if axis is None:
+        return None
+    m = halo_lib.product_size(axis, mesh_shape)
+    good = size % m == 0 and (size // m) % s == 0 and size // m >= max(k, s)
+    return axis if good else None
+
+
 @dataclasses.dataclass(frozen=True)
 class ConvSharding:
     """Distribution descriptor for a conv/pool layer (paper's D).
 
     batch_axes: mesh axes sharding N (sample parallelism).
-    h_axis / w_axis: mesh axes sharding H / W (spatial parallelism), or None.
+    h_axis / w_axis: the mesh axis — or *tuple* of mesh axes forming one
+        product axis (16x16-mesh splits, core.halo) — sharding H / W
+        (spatial parallelism), or None.
     """
     batch_axes: tuple[str, ...] = ()
-    h_axis: str | None = None
-    w_axis: str | None = None
+    h_axis: str | tuple[str, ...] | None = None
+    w_axis: str | tuple[str, ...] | None = None
 
     @property
     def is_spatial(self) -> bool:
         return self.h_axis is not None or self.w_axis is not None
+
+    @property
+    def h_axes(self) -> tuple[str, ...]:
+        return halo_lib.axes_tuple(self.h_axis)
+
+    @property
+    def w_axes(self) -> tuple[str, ...]:
+        return halo_lib.axes_tuple(self.w_axis)
+
+    @property
+    def spatial_axes(self) -> tuple[str, ...]:
+        """All mesh axes sharding H or W, flattened (BN psums, pooling)."""
+        return self.h_axes + self.w_axes
 
     def x_spec(self) -> P:
         return P(self.batch_axes or None, self.h_axis, self.w_axis, None)
@@ -68,17 +108,9 @@ class ConvSharding:
         if mesh is None or not self.is_spatial:
             return self
         shape = dict(mesh.shape)
-
-        def ok(size, axis):
-            if axis is None:
-                return None
-            m = shape[axis]
-            good = size % m == 0 and (size // m) % s == 0 \
-                and size // m >= max(k, s)
-            return axis if good else None
-
-        return dataclasses.replace(self, h_axis=ok(h, self.h_axis),
-                                    w_axis=ok(w, self.w_axis))
+        return dataclasses.replace(
+            self, h_axis=fit_spatial_axis(h, self.h_axis, k, s, shape),
+            w_axis=fit_spatial_axis(w, self.w_axis, k, s, shape))
 
 
 def _conv_nhwc(x, w, strides, pads, backend: str = "xla"):
@@ -105,6 +137,8 @@ def _split_dim_conv(x, w, *, dim, s, k, lo, hi, axis_name, axis_size,
     """Conv along one sharded spatial `dim` (1=H or 2=W) of local block x.
 
     `other_pads`/`stride_other` apply to the other (unsharded) spatial dim.
+    `axis_name` may be a tuple of mesh axes forming one product axis of
+    total size `axis_size` (core.halo's linearized-index convention).
     Returns the local output block for this shard.
     """
     hl = x.shape[dim]
@@ -169,23 +203,27 @@ def _local_conv(x, w, *, strides, sharding: ConvSharding, mesh_shape,
 
     if sharding.h_axis is not None and sharding.w_axis is not None:
         # shard H first (halo on H incl. full local W), then W.
-        x = halo_lib.halo_exchange(x, 1, ph[0], ph[1], sharding.h_axis,
-                                   mesh_shape[sharding.h_axis])
+        x = halo_lib.halo_exchange(
+            x, 1, ph[0], ph[1], sharding.h_axis,
+            halo_lib.product_size(sharding.h_axis, mesh_shape))
         return _split_dim_conv(
             x, w, dim=2, s=s_w, k=k_w, lo=pw[0], hi=pw[1],
-            axis_name=sharding.w_axis, axis_size=mesh_shape[sharding.w_axis],
+            axis_name=sharding.w_axis,
+            axis_size=halo_lib.product_size(sharding.w_axis, mesh_shape),
             other_pads=(0, 0), stride_other=s_h, overlap=overlap,
             backend=backend)
     if sharding.h_axis is not None:
         return _split_dim_conv(
             x, w, dim=1, s=s_h, k=k_h, lo=ph[0], hi=ph[1],
-            axis_name=sharding.h_axis, axis_size=mesh_shape[sharding.h_axis],
+            axis_name=sharding.h_axis,
+            axis_size=halo_lib.product_size(sharding.h_axis, mesh_shape),
             other_pads=pw, stride_other=s_w, overlap=overlap,
             backend=backend)
     if sharding.w_axis is not None:
         return _split_dim_conv(
             x, w, dim=2, s=s_w, k=k_w, lo=pw[0], hi=pw[1],
-            axis_name=sharding.w_axis, axis_size=mesh_shape[sharding.w_axis],
+            axis_name=sharding.w_axis,
+            axis_size=halo_lib.product_size(sharding.w_axis, mesh_shape),
             other_pads=ph, stride_other=s_h, overlap=overlap,
             backend=backend)
     raise AssertionError("not spatial")
@@ -201,8 +239,7 @@ def spatial_conv2d(x, w, *, strides=(1, 1), sharding: ConvSharding,
     backend: 'xla' (default) or 'pallas' — which kernel runs the local conv
        each shard computes after its halo exchange (see _conv_nhwc).
     """
-    if x.dtype != w.dtype:      # mixed-precision policy: compute in w's dtype
-        x = x.astype(w.dtype)
+    x = cast_to_weight_dtype(x, w)   # the repo-wide mixed-precision rule
     if not sharding.is_spatial:
         # pure sample parallelism: local conv, XLA batches it (paper Fig 1a).
         k_h, k_w = w.shape[0], w.shape[1]
@@ -220,8 +257,12 @@ def spatial_conv2d(x, w, *, strides=(1, 1), sharding: ConvSharding,
                            mesh_shape=mesh_shape, overlap=overlap,
                            backend=backend)
     spec = sharding.x_spec()
+    # legacy replication tracking has no rule for pallas_call, so the
+    # Pallas local-conv path drops it (forward-verified; take gradients
+    # through the XLA backend on legacy jax — see utils.shard_map).
+    lcr = False if backend == "pallas" else None
     return shard_map(fn, mesh=mesh, in_specs=(spec, P()),
-                     out_specs=spec)(x, w)
+                     out_specs=spec, legacy_check_rep=lcr)(x, w)
 
 
 # ---------------------------------------------------------------------------
@@ -238,14 +279,16 @@ def _local_pool(x, *, window, strides, sharding: ConvSharding, mesh_shape,
 
     pads = [(0, 0), ph, pw, (0, 0)]
     if sharding.h_axis is not None:
-        x = halo_lib.halo_exchange(x, 1, ph[0], ph[1], sharding.h_axis,
-                                   mesh_shape[sharding.h_axis],
-                                   edge_value=edge)
+        x = halo_lib.halo_exchange(
+            x, 1, ph[0], ph[1], sharding.h_axis,
+            halo_lib.product_size(sharding.h_axis, mesh_shape),
+            edge_value=edge)
         pads[1] = (0, 0)
     if sharding.w_axis is not None:
-        x = halo_lib.halo_exchange(x, 2, pw[0], pw[1], sharding.w_axis,
-                                   mesh_shape[sharding.w_axis],
-                                   edge_value=edge)
+        x = halo_lib.halo_exchange(
+            x, 2, pw[0], pw[1], sharding.w_axis,
+            halo_lib.product_size(sharding.w_axis, mesh_shape),
+            edge_value=edge)
         pads[2] = (0, 0)
     return _pool_windows(x, window, strides, tuple(pads), kind)
 

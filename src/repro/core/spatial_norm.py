@@ -56,10 +56,9 @@ def batch_norm(x, gamma, beta, *, sharding: ConvSharding, mesh=None,
 
     comm_axes: tuple[str, ...]
     if scope == "spatial":
-        comm_axes = tuple(a for a in (sharding.h_axis, sharding.w_axis) if a)
+        comm_axes = sharding.spatial_axes
     elif scope == "global":
-        comm_axes = tuple(a for a in (sharding.batch_axes or ())
-                          + (sharding.h_axis, sharding.w_axis) if a)
+        comm_axes = tuple(sharding.batch_axes or ()) + sharding.spatial_axes
     else:
         raise ValueError(f"unknown BN scope {scope!r}")
 

@@ -11,8 +11,12 @@ sample x spatial parallelism; add `--strategy auto` to run the paper's §V-C
 strategy optimizer at startup and execute its per-layer distribution plan
 (with automatic inter-layer resharding) instead of the uniform default.
 The solved plan may mix sample, spatial and channel/filter (§III-D) layers
-— CF layers execute via core.channel_conv (row-parallel conv); pass
---no-cf to restrict the search to sample/spatial for A/B comparison.
+— including H/W split over *products* of mesh axes (core.halo) and
+CF x spatial compositions whose halo exchange and CF collective share one
+shard_map (core.channel_conv), the decompositions 16x16 meshes need; the
+CF mode ('filter' vs 'channel') is picked per layer from the
+AG(x)-vs-RS(y) payload sizes.  Pass --no-cf to restrict the search to
+sample/spatial for A/B comparison.
 """
 from __future__ import annotations
 
@@ -160,8 +164,10 @@ def main():
                          "ConvSharding to every layer (legacy); 'auto' runs "
                          "the paper's §V-C optimizer at startup and executes "
                          "the solved per-layer plan with resharding — "
-                         "including §III-D channel/filter layers "
-                         "(core.channel_conv) unless --no-cf")
+                         "including §III-D channel/filter layers, CF x "
+                         "spatial compositions and product-axis spatial "
+                         "splits (core.channel_conv, core.halo) unless "
+                         "--no-cf")
     ap.add_argument("--no-cf", action="store_true",
                     help="exclude channel/filter candidates from --strategy "
                          "auto (sample/spatial only, the pre-CF behavior)")

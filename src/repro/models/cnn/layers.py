@@ -34,12 +34,15 @@ def conv_init(key, k: int, c_in: int, c_out: int, dtype=jnp.float32):
 
 def conv_apply(params, x, *, stride=1, sharding, mesh=None, overlap=True,
                backend="xla"):
+    # both descriptor kinds carry the §III-A geometry fit (CFSharding's
+    # covers its composed spatial axes; the CF group is validated at plan
+    # compile time)
+    sharding = sharding.fit(x.shape[1], x.shape[2], params["w"].shape[0],
+                            stride, mesh)
     if isinstance(sharding, CFSharding):
         return cf_conv2d(x, params["w"], strides=(stride, stride),
                          sharding=sharding, mesh=mesh, overlap=overlap,
                          backend=backend)
-    sharding = sharding.fit(x.shape[1], x.shape[2], params["w"].shape[0],
-                            stride, mesh)
     return spatial_conv2d(x, params["w"], strides=(stride, stride),
                           sharding=sharding, mesh=mesh, overlap=overlap,
                           backend=backend)
@@ -80,7 +83,7 @@ def global_avg_pool(x, *, sharding: ConvSharding, mesh=None):
     import functools
     from jax.sharding import PartitionSpec as P
     mesh = mesh or jax.sharding.get_abstract_mesh()
-    axes = tuple(a for a in (sharding.h_axis, sharding.w_axis) if a)
+    axes = sharding.spatial_axes   # flattened, incl. product-axis splits
     shape = dict(mesh.shape)
     denom = 1
     for a in axes:

@@ -3,7 +3,7 @@ process keeps a single CPU device (the 512-device env is dry-run-only).
 
 Usage:  python tests/dist_checks.py <group>
 Groups: conv | attention | ssm | models | train | compress | plan | cf |
-        spatial2d
+        spatial2d | multiaxis
 Exits 0 on success; any assertion failure exits non-zero.
 """
 import os
@@ -433,11 +433,30 @@ def check_cf():
                 np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                            rtol=3e-4, atol=3e-4)
 
-    # --- the Pallas implicit-GEMM kernel through the CF path (interpret
-    # mode on CPU — numerics-identical to the TPU lowering) ----------------
+    # --- the §IV-A chunked channel-block split (overlapped channel mode,
+    # the TPU default) pinned explicitly: parity incl. grads -------------
     x = jax.random.normal(key, (4, 8, 8, 8), jnp.float32)
     w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 8)) * 0.1
     sh = CFSharding(batch_axes=("data",), cf_axis="model")
+    ref = oracle_conv(x, w, 1)
+    gr = jax.grad(lambda x, w: jnp.sum(oracle_conv(x, w, 1) ** 2),
+                  argnums=(0, 1))(x, w)
+    for chunks in (2, 3):
+        with mesh:
+            got = jax.jit(lambda x, w: cf_conv2d(
+                x, w, sharding=sh, mesh=mesh,
+                channel_chunks=chunks))(x, w)
+            gd = jax.jit(jax.grad(lambda x, w: jnp.sum(cf_conv2d(
+                x, w, sharding=sh, mesh=mesh,
+                channel_chunks=chunks) ** 2), argnums=(0, 1)))(x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+        for a, b in zip(gd, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=3e-4, atol=3e-4)
+
+    # --- the Pallas implicit-GEMM kernel through the CF path (interpret
+    # mode on CPU — numerics-identical to the TPU lowering) ----------------
     with mesh:
         got = jax.jit(lambda x, w: cf_conv2d(
             x, w, sharding=sh, mesh=mesh, backend="pallas"))(x, w)
@@ -590,6 +609,174 @@ def check_spatial2d():
                                    rtol=3e-4, atol=3e-5)
 
 
+def check_multiaxis():
+    """Multi-axis spatial + CF x spatial composition on an 8-device mesh
+    reshaped to (2, 2, 2) — the 16x16-mesh decompositions at test scale:
+    halo exchange over a *product* of mesh axes, the CF collective and the
+    halo in one shard_map (both modes, overlapped and not, Pallas interpret
+    backend), pooling/BN over product axes, and the acceptance check — a
+    solved auto plan containing >= 1 multi-axis-H layer and >= 1
+    CF x spatial layer matches the single-device oracle (fwd + grads)."""
+    from repro.core.channel_conv import CFSharding, cf_batch_norm, cf_conv2d
+    from repro.core.spatial_conv import (ConvSharding, spatial_conv2d,
+                                         spatial_pool)
+    from repro.core.spatial_norm import batch_norm
+
+    mesh = make_mesh(data=2, model=2, pod=2)
+    key = jax.random.PRNGKey(0)
+
+    # --- conv under H split over the ('data','model') product axis --------
+    sh = ConvSharding(batch_axes=("pod",), h_axis=("data", "model"))
+    for (K, s, H, W) in [(3, 1, 16, 8), (3, 2, 16, 16), (7, 2, 32, 8),
+                         (1, 1, 8, 8)]:
+        x = jax.random.normal(key, (2, H, W, 3), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (K, K, 3, 5)) * 0.1
+        ref = oracle_conv(x, w, s)
+        gr = jax.grad(lambda x, w: jnp.sum(oracle_conv(x, w, s) ** 2),
+                      argnums=(0, 1))(x, w)
+        for overlap in (False, True):
+            with mesh:
+                got = jax.jit(lambda x, w: spatial_conv2d(
+                    x, w, strides=(s, s), sharding=sh, mesh=mesh,
+                    overlap=overlap))(x, w)
+                gd = jax.jit(jax.grad(lambda x, w: jnp.sum(spatial_conv2d(
+                    x, w, strides=(s, s), sharding=sh, mesh=mesh,
+                    overlap=overlap) ** 2), argnums=(0, 1)))(x, w)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=2e-5, atol=2e-5)
+            for a, b in zip(gd, gr):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=3e-4, atol=3e-4)
+
+    # --- 2-D decomposition where one dim is a product: H x (W product) ----
+    sh2 = ConvSharding(batch_axes=(), h_axis="model",
+                       w_axis=("pod", "data"))
+    x = jax.random.normal(key, (2, 16, 16, 3), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 3, 5)) * 0.1
+    with mesh:
+        got = jax.jit(lambda x, w: spatial_conv2d(
+            x, w, sharding=sh2, mesh=mesh))(x, w)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(oracle_conv(x, w, 1)),
+                               rtol=2e-5, atol=2e-5)
+
+    # --- pooling and BN over the product axis -----------------------------
+    x = jax.random.normal(key, (2, 16, 8, 6), jnp.float32) * 3 + 1
+    for kind in ("max", "avg"):
+        ref = spatial_pool(x, window=(3, 3), strides=(2, 2),
+                           sharding=ConvSharding(), kind=kind)
+        with mesh:
+            got = jax.jit(lambda x: spatial_pool(
+                x, window=(3, 3), strides=(2, 2), sharding=sh, mesh=mesh,
+                kind=kind))(x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+    g = jnp.ones((6,)); b = jnp.zeros((6,))
+    ref = batch_norm(x, g, b, sharding=ConvSharding(), scope="local")
+    with mesh:
+        got = jax.jit(lambda x: batch_norm(
+            x, g, b, sharding=sh, mesh=mesh, scope="global"))(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+    # --- CF x spatial: halo + CF collective in ONE shard_map --------------
+    x = jax.random.normal(key, (2, 16, 8, 8), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 12)) * 0.1
+    ref = oracle_conv(x, w, 1)
+    gr = jax.grad(lambda x, w: jnp.sum(oracle_conv(x, w, 1) ** 2),
+                  argnums=(0, 1))(x, w)
+    for mode in ("channel", "filter"):
+        for overlap in (False, True):
+            shc = CFSharding(batch_axes=(), cf_axis="model", mode=mode,
+                             h_axis=("pod", "data"))
+            with mesh:
+                got = jax.jit(lambda x, w: cf_conv2d(
+                    x, w, sharding=shc, mesh=mesh, overlap=overlap))(x, w)
+                gd = jax.jit(jax.grad(lambda x, w: jnp.sum(cf_conv2d(
+                    x, w, sharding=shc, mesh=mesh, overlap=overlap) ** 2),
+                    argnums=(0, 1)))(x, w)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=2e-5, atol=2e-5)
+            for a, b in zip(gd, gr):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=3e-4, atol=3e-4)
+
+    # CF x spatial BN: per-channel stats cross the spatial axes now
+    shc = CFSharding(batch_axes=(), cf_axis="model", h_axis=("pod", "data"))
+    xb = jax.random.normal(key, (2, 16, 8, 8), jnp.float32) * 3 + 1
+    gb = jnp.ones((8,)); bb = jnp.zeros((8,))
+    ref = batch_norm(xb, gb, bb, sharding=ConvSharding(), scope="local")
+    with mesh:
+        got = jax.jit(lambda x: cf_batch_norm(
+            x, gb, bb, sharding=shc, mesh=mesh, scope="global"))(xb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+    # --- the Pallas implicit-GEMM backend through the composed path
+    # (interpret mode on CPU — numerics-identical to the TPU lowering) -----
+    with mesh:
+        got = jax.jit(lambda x, w: spatial_conv2d(
+            x, w, sharding=ConvSharding(batch_axes=("pod",),
+                                        h_axis=("data", "model")),
+            mesh=mesh, backend="pallas"))(x, w)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(oracle_conv(x, w, 1)),
+                               rtol=2e-5, atol=2e-5)
+
+    # --- acceptance: a solved auto plan on the (2,2,2) mesh with >= 1
+    # multi-axis-H layer and >= 1 CF x spatial layer vs the oracle ---------
+    from repro.core import plan as plan_lib
+    from repro.core.perfmodel import TPU_V5E
+    from repro.data.pipeline import synthetic_mesh_batch
+    from repro.models.cnn import meshnet
+
+    cfg = meshnet.MeshNetConfig("t", input_hw=32, in_channels=8,
+                                convs_per_block=1, widths=(16, 32, 64),
+                                bn_scope="global")
+    specs = meshnet.layer_specs(cfg, 2)
+    auto = plan_lib.plan_line(TPU_V5E, specs, mesh)
+    n_multi = sum(len(lp.sharding.h_axes) > 1 or len(lp.sharding.w_axes) > 1
+                  for lp in auto.layers.values())
+    n_cfsp = sum(isinstance(lp.sharding, CFSharding)
+                 and lp.sharding.cf_axis is not None
+                 and lp.sharding.is_spatial
+                 for lp in auto.layers.values())
+    assert n_multi >= 1, auto.describe()
+    assert n_cfsp >= 1, auto.describe()
+
+    params = meshnet.init(jax.random.PRNGKey(0), cfg)
+    batch = {k: jnp.asarray(v) for k, v in
+             synthetic_mesh_batch(0, 2, 32, 8, out_hw=4).items()}
+    ref_l = meshnet.loss_fn(params, batch, cfg, ConvSharding())
+    ref_g = jax.grad(lambda p: meshnet.loss_fn(
+        p, batch, cfg, ConvSharding()))(params)
+    with mesh:
+        got_l = jax.jit(lambda p, bb: meshnet.loss_fn(
+            p, bb, cfg, auto, mesh))(params, batch)
+        got_g = jax.jit(jax.grad(lambda p: meshnet.loss_fn(
+            p, batch, cfg, auto, mesh)))(params)
+    np.testing.assert_allclose(float(got_l), float(ref_l), rtol=2e-5)
+    for a, r in zip(jax.tree.leaves(got_g), jax.tree.leaves(ref_g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   rtol=3e-4, atol=3e-5)
+
+    # a forced mixed plan crossing single-axis, product-axis and CF x
+    # spatial layers: each transition is one §III-C reshard point
+    from repro.core.distribution import Dist
+    forced = plan_lib.compile_plan(
+        {"conv1_1": Dist("hyb", {"N": ("pod",), "H": ("data", "model")}),
+         "conv2_1": Dist("cfh", {"N": ("pod",), "H": ("data",),
+                                 "C": ("model",), "F": ("model",)}),
+         "conv3_1": Dist("hyb1", {"N": ("data",), "H": ("model",)}),
+         "pred": Dist("wprod", {"N": ("pod",), "W": ("data", "model")})},
+        specs, mesh)
+    assert forced.n_reshards == 3, forced.describe()
+    with mesh:
+        got_l = jax.jit(lambda p, bb: meshnet.loss_fn(
+            p, bb, cfg, forced, mesh))(params, batch)
+    np.testing.assert_allclose(float(got_l), float(ref_l), rtol=2e-5)
+
+
 def check_compress():
     from repro.optim.grad_compress import cross_pod_mean
     mesh = make_mesh(data=2, model=2, pod=2)
@@ -624,7 +811,8 @@ def check_compress():
 GROUPS = {"conv": check_conv, "attention": check_attention,
           "ssm": check_ssm, "models": check_models, "train": check_train,
           "compress": check_compress, "plan": check_plan,
-          "cf": check_cf, "spatial2d": check_spatial2d}
+          "cf": check_cf, "spatial2d": check_spatial2d,
+          "multiaxis": check_multiaxis}
 
 if __name__ == "__main__":
     GROUPS[sys.argv[1]]()

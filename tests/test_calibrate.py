@@ -121,6 +121,33 @@ def test_load_warns_when_calibration_covers_foreign_network(tmp_path,
     assert c2.table == c.table          # loaded, not re-measured
 
 
+def test_load_or_run_grows_table_for_new_shapes(tmp_path, capsys):
+    """grow_table=True: a loaded calibration is extended with the shard
+    shapes a new network adds (and saved back), instead of degrading to
+    the analytic fallback — the CI bench lane's cross-run cache contract."""
+    path = str(tmp_path / "c.json")
+    c = cal.load_or_run(path, SPECS, MS22, timer=fake_timer)
+    n0 = len(c.table)
+    other = meshnet.layer_specs(
+        meshnet.MeshNetConfig("o", input_hw=128, in_channels=6,
+                              convs_per_block=2, widths=(12, 24)), 8)
+    capsys.readouterr()
+    c2 = cal.load_or_run(path, other, MS22, timer=fake_timer,
+                         grow_table=True)
+    out = capsys.readouterr().out
+    assert len(c2.table) > n0
+    assert "grew" in out and "covers only" not in out
+    assert cal.coverage(c2, other, MS22) == pytest.approx(1.0)
+    assert cal.coverage(c2, SPECS, MS22) == pytest.approx(1.0)  # kept
+    # the grown table was persisted: a reload covers both networks and a
+    # further grow call adds nothing
+    c3 = cal.load_or_run(path, other, MS22, timer=fake_timer)
+    assert c3.table == c2.table
+    assert cal.grow(c3, other, MS22, timer=fake_timer) == 0
+    # machine constants are untouched by growth (shape-independent fits)
+    assert c3.machine == c.machine
+
+
 def test_calibrate_caps_shape_grid():
     c = cal.calibrate(SPECS, MS22, timer=fake_timer, max_shapes=4)
     assert len(c.table) <= 4

@@ -103,3 +103,51 @@ def test_cf_mixed_precision_casts_to_weight_dtype():
          ).astype(jnp.bfloat16)
     y = cf_conv2d(x, w, sharding=CFSharding())
     assert y.dtype == jnp.bfloat16
+
+
+def test_mixed_precision_rule_unified_across_conv_paths():
+    """Both conv runtimes share cast_to_weight_dtype (compute in the
+    *weight* dtype), so a mixed sample/spatial/CF plan cannot change
+    dtype — or numerics — at a reshard boundary: the same layer computes
+    the same values whichever decomposition executes it."""
+    from repro.core.spatial_conv import cast_to_weight_dtype
+    x32 = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 4))
+    w16 = (jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 4)) * 0.1
+           ).astype(jnp.bfloat16)
+    # f32 activations into bf16 weights: both paths compute in bf16
+    y_sp = spatial_conv2d(x32, w16, sharding=ConvSharding())
+    y_cf = cf_conv2d(x32, w16, sharding=CFSharding())
+    assert y_sp.dtype == y_cf.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(y_sp), np.asarray(y_cf))
+    # bf16 activations into f32 weights: both paths upcast to f32
+    x16 = x32.astype(jnp.bfloat16)
+    w32 = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 4)) * 0.1
+    y_sp = spatial_conv2d(x16, w32, sharding=ConvSharding())
+    y_cf = cf_conv2d(x16, w32, sharding=CFSharding())
+    assert y_sp.dtype == y_cf.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(y_sp), np.asarray(y_cf))
+    # the shared helper is the single source of the rule
+    assert cast_to_weight_dtype(x32, w16).dtype == jnp.bfloat16
+    assert cast_to_weight_dtype(x16, w32).dtype == jnp.float32
+    assert cast_to_weight_dtype(x32, w32) is x32      # no-op when equal
+
+
+def test_cfsharding_spatial_composition_surface():
+    """CFSharding carries composed spatial axes: spec, fit and the
+    same-axis guard."""
+    sh = CFSharding(batch_axes=("pod",), cf_axis="model",
+                    h_axis=("data", "x"))
+    assert sh.is_spatial and sh.h_axes == ("data", "x")
+    assert tuple(sh.x_spec()) == (("pod",), ("data", "x"), None, "model")
+    # geometry fit drops an unfit product split (shard < kernel)
+    fitted = sh.fit(4, 4, 3, 1, _FakeMesh({"data": 2, "x": 2,
+                                           "model": 2, "pod": 2}))
+    assert fitted.h_axis is None and fitted.cf_axis == "model"
+    # cf axis colliding with a spatial axis is rejected at construction
+    with pytest.raises(ValueError):
+        CFSharding(cf_axis="model", h_axis=("model", "data"))
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape

@@ -51,6 +51,57 @@ def test_overlap_reduces_cost():
     assert c_ov.total <= c_no.total
 
 
+def test_product_axis_halo_hop_pricing():
+    """Halo over a product of mesh axes (H split 2x2 ways) pays extra link
+    hops on its boundary-crossing sends but sends fewer messages than the
+    H x W decomposition at the same total bytes (no corner exchanges):
+    dearer than a true single-axis split, cheaper than H x W on squares."""
+    assert pm.sr_time(M, 1024, hops=2) > pm.sr_time(M, 1024)
+    assert pm.sr_time(M, 1024, hops=2) == M.alpha * 2 + M.beta * 1024
+    layer = pm.ConvLayer("c", n=2, c=16, h=64, w=64, f=16, k=3, s=1)
+    ms = {"a": 2, "b": 2}
+    comm = lambda c: c.fp - c.fp_compute    # noqa: E731
+    c_prod = pm.layer_cost(M, layer, Dist("hh", {"H": ("a", "b")}), ms,
+                           overlap=False)
+    c_hw = pm.layer_cost(M, layer, Dist("hw", {"H": ("a",), "W": ("b",)}),
+                         ms, overlap=False)
+    c_one = pm.layer_cost(M, layer, Dist("h4", {"H": ("a",)}), {"a": 4},
+                          overlap=False)
+    assert c_prod.fp_compute == c_hw.fp_compute == c_one.fp_compute
+    assert comm(c_one) < comm(c_prod) < comm(c_hw)
+
+
+def test_cf_overlap_credit_matches_runtime_semantics():
+    """The model's CF forward term credits overlap (fp = max(compute, RS))
+    — justified now that channel_conv's overlapped channel mode pipelines
+    the psum_scatter with per-channel-block compute (§IV-A analogue)."""
+    layer = pm.ConvLayer("cf", n=4, c=32, h=8, w=8, f=32, k=3, s=1)
+    ms = {"data": 2, "model": 2}
+    cf = Dist("cf", {"N": ("data",), "C": ("model",), "F": ("model",)})
+    ov = pm.layer_cost(M, layer, cf, ms, overlap=True)
+    no = pm.layer_cost(M, layer, cf, ms, overlap=False)
+    rs = no.fp - no.fp_compute
+    assert rs > 0, "CF layer must pay a forward reduce-scatter"
+    assert ov.fp == max(ov.fp_compute, rs)
+    assert ov.total <= no.total
+
+
+def test_cf_collective_words_at_submesh_sizes():
+    """AG(x)/RS(y) payloads shrink with composed spatial splits and the
+    collective runs at the CF sub-mesh size, not the whole mesh."""
+    layer = pm.ConvLayer("cf", n=4, c=16, h=16, w=16, f=32, k=3, s=1)
+    ms = {"pod": 2, "data": 2, "model": 2}
+    pure = Dist("cf", {"N": ("pod", "data"), "C": ("model",),
+                       "F": ("model",)})
+    comp = Dist("cfh", {"N": ("pod",), "H": ("data",), "C": ("model",),
+                        "F": ("model",)})
+    wp = pm.cf_collective_words(layer, pure, ms)
+    wc = pm.cf_collective_words(layer, comp, ms)
+    assert wp["p_cf"] == wc["p_cf"] == 2          # sub-mesh, not 8
+    assert wc["rs_y"] == wp["rs_y"]               # n doubles, H halves
+    assert pm.cf_mode_for(layer, pure, ms) == "filter"   # F=2C at s=1
+
+
 def test_candidates_valid():
     layer = pm.ConvLayer("c", n=6, c=18, h=96, w=96, f=64, k=3, s=2)
     ms = {"data": 3, "model": 2}

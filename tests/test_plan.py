@@ -21,6 +21,7 @@ from repro.launch.mesh import make_mesh
 from repro.models.cnn import meshnet, resnet
 
 MS22 = {"data": 2, "model": 2}
+MS222 = {"pod": 2, "data": 2, "model": 2}
 
 
 # ------------------------------------------------------------- lowering --
@@ -42,31 +43,56 @@ def test_dist_to_sharding_lowers_channel_filter():
     assert sh.cf_axis == "model" and sh.mode == "channel"
 
 
+def test_dist_to_sharding_lowers_multi_axis_spatial():
+    """H (or W) over a *product* of mesh axes lowers to a tuple h_axis —
+    the 16x16-mesh decomposition (core.halo product axes)."""
+    sh = dist_to_sharding(Dist("s", {"H": ("data", "model")}), MS22)
+    assert sh == ConvSharding(h_axis=("data", "model"))
+    assert sh.h_axes == ("data", "model") and sh.spatial_axes == sh.h_axes
+    sh = dist_to_sharding(Dist("s", {"N": ("pod",),
+                                     "W": ("data", "model")}), MS222)
+    assert sh == ConvSharding(batch_axes=("pod",), w_axis=("data", "model"))
+
+
+def test_dist_to_sharding_lowers_cf_x_spatial():
+    """CF on one mesh axis composed with spatial sharding on others lowers
+    to a CFSharding carrying h_axis/w_axis (one-shard_map composition)."""
+    sh = dist_to_sharding(Dist("cfh", {"H": ("data",), "C": ("model",),
+                                       "F": ("model",)}), MS22)
+    assert isinstance(sh, CFSharding)
+    assert sh.cf_axis == "model" and sh.h_axis == "data"
+    assert sh.is_spatial
+    # spatial over a product of axes, CF on the third
+    sh = dist_to_sharding(Dist("cfh2", {"H": ("pod", "data"),
+                                        "C": ("model",), "F": ("model",)}),
+                          MS222)
+    assert sh.cf_axis == "model" and sh.h_axis == ("pod", "data")
+
+
 def test_dist_to_sharding_rejects_non_executable():
-    with pytest.raises(PlanError):   # multi-axis spatial
-        dist_to_sharding(Dist("s", {"H": ("data", "model")}), MS22)
     with pytest.raises(PlanError):   # non-CNN dim
         dist_to_sharding(Dist("seq", {"N": ("data",), "S": ("model",)}),
                          MS22)
-    with pytest.raises(PlanError):   # CF + spatial on one layer
-        dist_to_sharding(Dist("cfh", {"H": ("data",), "C": ("model",),
-                                      "F": ("model",)}), MS22)
     with pytest.raises(PlanError):   # C and F on different axes
         dist_to_sharding(Dist("cx", {"C": ("model",), "F": ("data",)}),
                          MS22)
     with pytest.raises(PlanError):   # multi-axis CF group
         dist_to_sharding(Dist("c2", {"C": ("data", "model"),
                                      "F": ("data", "model")}), MS22)
+    with pytest.raises(PlanError):   # CF and spatial on the SAME axis
+        dist_to_sharding(Dist("clash", {"H": ("model",), "C": ("model",),
+                                        "F": ("model",)}), MS22)
 
 
 def test_plan_error_names_layer_and_suggests_demotion():
     """PlanError diagnostics: the offending layer and dist are named and
     the nearest executable demotion is suggested."""
     with pytest.raises(PlanError, match=r"layer 'res9'.*nearest executable"):
-        dist_to_sharding(Dist("cfh", {"H": ("data",), "C": ("model",),
-                                      "F": ("model",)}), MS22, layer="res9")
+        dist_to_sharding(Dist("cx", {"C": ("model",), "F": ("data",)}),
+                         MS22, layer="res9")
     with pytest.raises(PlanError, match=r"demot"):
-        dist_to_sharding(Dist("s", {"H": ("data", "model")}), MS22)
+        dist_to_sharding(Dist("c2", {"C": ("data", "model"),
+                                     "F": ("data", "model")}), MS22)
     # compile_plan names the layer for the indivisible-batch case too
     specs = [ConvLayer("odd", n=3, c=4, h=32, w=32, f=8, k=3, s=1)]
     with pytest.raises(PlanError, match=r"layer 'odd'.*nearest executable"):
@@ -134,11 +160,13 @@ def test_compile_plan_demotes_nondivisible_channels():
         assert "demoted C/F" in lp.note
     # the cost report is computed under the demoted (executed) dists
     assert plan.predicted is not None
-    # divisible channels survive as CFSharding
+    # divisible channels survive as CFSharding (mode solved per layer from
+    # the AG(x)-vs-RS(y) payloads: F = 2C at stride 1 -> 'filter')
     specs[0] = ConvLayer("a", n=8, c=4, h=8, w=8, f=8, k=3, s=1)
     plan = compile_plan({"a": dists["a"]}, specs[:1], MS22)
     assert plan.layers["a"].sharding == CFSharding(batch_axes=("data",),
-                                                   cf_axis="model")
+                                                   cf_axis="model",
+                                                   mode="filter")
     assert not plan.layers["a"].note
 
 
@@ -151,6 +179,61 @@ def test_cf_candidates_executable_and_solver_uses_them():
     assert any(d.axes("C") for d in cands), [d.name for d in cands]
     nocf = executable_candidates(layer, MS22, allow_channel_filter=False)
     assert not any(d.axes("C") for d in nocf)
+
+
+def test_every_executable_candidate_lowers():
+    """Property: every dist `executable_candidates` emits survives
+    `dist_to_sharding` without PlanError — the solver-side filter and the
+    runtime lowering must not drift (now including multi-axis spatial and
+    CF x spatial dists on 3-axis meshes)."""
+    meshes = [MS22, MS222, {"data": 4, "model": 2}, {"data": 2}]
+    layers = [
+        ConvLayer("big", n=8, c=16, h=64, w=64, f=32, k=3, s=1),
+        ConvLayer("strided", n=4, c=8, h=32, w=32, f=16, k=3, s=2),
+        ConvLayer("late", n=2, c=32, h=8, w=8, f=64, k=3, s=1),
+        ConvLayer("tiny", n=2, c=32, h=4, w=4, f=32, k=3, s=1),
+        ConvLayer("pool", n=8, c=16, h=32, w=32, f=16, k=3, s=2,
+                  kind="pool"),
+        ConvLayer("pred", n=2, c=64, h=8, w=8, f=1, k=1, s=1),
+    ]
+    n_multi = n_cfsp = 0
+    for ms in meshes:
+        for layer in layers:
+            for d in executable_candidates(layer, ms):
+                sh = dist_to_sharding(d, ms, layer=layer.name)  # must not raise
+                assert sh is not None
+                if len(d.axes("H")) > 1 or len(d.axes("W")) > 1:
+                    n_multi += 1
+                if d.axes("C") and (d.axes("H") or d.axes("W")):
+                    n_cfsp += 1
+    # the new hybrid families must actually appear in the candidate sets
+    assert n_multi > 0, "no multi-axis spatial candidate emitted"
+    assert n_cfsp > 0, "no CF x spatial candidate emitted"
+
+
+def test_solver_picks_cf_mode_from_collective_sizes():
+    """The compiled mode per CF layer is 'filter' iff AG(x) moves fewer
+    words than RS(y) — and the chosen mode's collective is the smaller one
+    (ROADMAP PR-2 leftover: no more blind 'channel')."""
+    from repro.core.perfmodel import cf_collective_words, cf_mode_for
+    cf = Dist("cf", {"N": ("data",), "C": ("model",), "F": ("model",)})
+    # F >> C at stride 1: RS(y) is the bigger payload -> 'filter'
+    grow = ConvLayer("grow", n=4, c=8, h=8, w=8, f=64, k=3, s=1)
+    # C >> F: AG(x) is the bigger payload -> 'channel'
+    shrink = ConvLayer("shrink", n=4, c=64, h=8, w=8, f=8, k=3, s=1)
+    for spec, want in ((grow, "filter"), (shrink, "channel")):
+        assert cf_mode_for(spec, cf, MS22) == want
+        words = cf_collective_words(spec, cf, MS22)
+        chosen = words["ag_x"] if want == "filter" else words["rs_y"]
+        assert chosen == min(words["ag_x"], words["rs_y"])
+        plan = compile_plan({spec.name: cf}, [spec], MS22)
+        sh = plan.layers[spec.name].sharding
+        assert isinstance(sh, CFSharding) and sh.mode == want
+    # the mode pick accounts for composed spatial splits (local payloads)
+    cfh = Dist("cfh", {"H": ("data",), "C": ("model",), "F": ("model",)})
+    plan = compile_plan({"grow": cfh}, [grow], MS22)
+    assert plan.layers["grow"].sharding.mode == \
+        cf_mode_for(grow, cfh, MS22) == "filter"
 
 
 def test_compile_plan_rejects_indivisible_batch():
@@ -280,3 +363,12 @@ def test_plan_spatial2d_distributed():
     """W-axis and 2-D (H x W) spatial decompositions through conv/pool and
     a compiled W-split plan (dist_checks group 'spatial2d')."""
     run_dist_group("spatial2d")
+
+
+def test_plan_multiaxis_distributed():
+    """8-device (2,2,2) mesh: product-axis halo conv/pool, CF x spatial
+    composition (both modes), the Pallas backend in interpret mode, and a
+    solved auto plan with >= 1 multi-axis-H layer and >= 1 CF x spatial
+    layer vs the single-device oracle (dist_checks group 'multiaxis';
+    fast — run by the CI fast lane like 'cf')."""
+    run_dist_group("multiaxis")
