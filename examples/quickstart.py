@@ -80,6 +80,31 @@ print("\nhand-mixed sample + two-axis-spatial + CF x spatial plan "
       "(consecutive CF layers chain; each family change is one reshard):")
 print(mixed16.describe())
 
+# --- memory-aware planning (--mem-limit): the paper's Table-2 story ------
+# When batch < devices, sample parallelism cannot reduce per-device memory
+# below one sample — the 2K mesh-tangling workload is "unreachable" on a
+# 16 GB device (paper §VI).  Solving the same network with and without the
+# capacity limit shows the change: the sample-parallel plan's cost report
+# carries a peak ABOVE the limit (the plan you cannot run), while the
+# --mem-limit solve answers with a spatial plan whose report fits — both
+# reports expose plan.predicted['memory'] (per-layer breakdowns + peak).
+layers2 = meshnet.layer_specs(cfg, n=2)       # batch 2 < 4 devices (§VI)
+MS22 = {"data": 2, "model": 2}
+sample2 = plan_lib.compile_plan(
+    {l.name: Dist("sample", {"N": ("data",)}) for l in layers2},
+    layers2, MS22, machine=machine)           # no limit: report only
+sample_peak = sample2.predicted["memory"]["peak_bytes"]
+limit = 0.75 * sample_peak                    # a device 3/4 that size
+print(f"\nuniform sample-parallel at batch 2 — stuck at one sample per "
+      f"device, peak ABOVE the {limit:.0f}-byte limit:")
+print(sample2.describe())
+fit2 = plan_lib.plan_line(machine, layers2, MS22, mem_limit=limit)
+print(f"\nsolved WITH --mem-limit {limit:.0f} "
+      f"(min-time subject to the fit — spatial buys the memory down):")
+print(fit2.describe())
+for name, lm in fit2.predicted["memory"]["per_layer"].items():
+    print(f"  {name:10s} {lm.total / 2**10:7.1f} KiB  ({lm.breakdown()})")
+
 # --- solve + compile for THIS machine's devices, then execute it ---------
 mesh = make_mesh(data=1, model=jax.device_count())
 plan = plan_lib.plan_line(machine, layers, mesh)

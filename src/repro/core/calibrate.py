@@ -33,6 +33,7 @@ partial calibration degrades gracefully instead of failing.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 from typing import Callable, Mapping, Sequence
@@ -58,6 +59,76 @@ HOST_BASE = Machine("host-base", peak_flops=1e11, mem_bw=20e9,
                     alpha=5e-6, beta=1 / 10.0e9,
                     alpha_coll=8e-6, beta_coll=1 / 10.0e9, wordsize=4,
                     compute_efficiency=1.0)
+
+
+# ---------------------------------------------------------------------------
+# device memory capacity + the model-vs-XLA memory cross-check
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def detect_mem_capacity(default: float = 8 << 30) -> float:
+    """Per-device memory capacity in bytes, for Machine.mem_capacity and
+    `--mem-limit auto`.
+
+    Accelerators report it directly: ``jax.local_devices()[0]
+    .memory_stats()['bytes_limit']``.  The host CPU backend returns None
+    from memory_stats, so the documented fallback divides /proc/meminfo
+    MemAvailable among the (possibly xla_force_host_platform forced)
+    device count — all host 'devices' share one RAM, so the per-device
+    share is the honest capacity.  `default` when neither source exists.
+    Memoized: MemAvailable jitters call-to-call, and a calibration must
+    stay deterministic within a process.
+    """
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:
+        stats = None
+    if stats and stats.get("bytes_limit"):
+        return float(stats["bytes_limit"])
+    try:
+        with open("/proc/meminfo") as f:
+            for line in f:
+                if line.startswith("MemAvailable:"):
+                    kb = float(line.split()[1])
+                    return kb * 1024 / max(jax.local_device_count(), 1)
+    except (OSError, ValueError, IndexError):
+        pass
+    return float(default)
+
+
+def compiled_peak_bytes(compiled) -> float:
+    """Per-device peak of a compiled executable from XLA's
+    memory_analysis — arguments + outputs + temps - aliased, the pattern
+    launch.dryrun proves out.  0.0 when the backend exposes nothing."""
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        return 0.0
+    if mem is None:
+        return 0.0
+    return float(getattr(mem, "argument_size_in_bytes", 0)
+                 + getattr(mem, "output_size_in_bytes", 0)
+                 + getattr(mem, "temp_size_in_bytes", 0)
+                 - getattr(mem, "alias_size_in_bytes", 0))
+
+
+def xla_peak_bytes(fn, *args) -> float:
+    """Lower + compile `fn(*args)` and report its XLA peak bytes/device."""
+    jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+    return compiled_peak_bytes(jitted.lower(*args).compile())
+
+
+def crosscheck_memory(plan, fn, *args) -> dict:
+    """The §VI memory-model validation loop: compare a compiled plan's
+    *predicted* peak (plan.predicted['memory'], core.perfmodel
+    .network_memory) against XLA's measured peak for the train step that
+    executes it.  `fn(*args)` must be the step the plan drives (jittable
+    or already jitted).  Returns predicted/measured bytes and their ratio
+    (nan when the backend reports no memory analysis)."""
+    predicted = float(plan.predicted["memory"]["peak_bytes"])
+    measured = xla_peak_bytes(fn, *args)
+    return {"predicted_bytes": predicted, "measured_bytes": measured,
+            "ratio": predicted / measured if measured else float("nan")}
 
 
 # ---------------------------------------------------------------------------
@@ -121,14 +192,16 @@ def comm_sizes(specs: Sequence[ConvLayer], mesh_shape: Mapping[str, int],
             n_l, c_l, h_l, w_l, f_l, p_c, p_f = \
                 _local_shards(layer, d, mesh_shape)
             o = layer.o
-            if o and d.ways("H", mesh_shape) > 1:
-                p2p.add(o * n_l * c_l * w_l * wordsize)      # halo on x
-                p2p.add(o * n_l * f_l * w_l * wordsize)      # halo on dL/dy
-            if o and d.ways("W", mesh_shape) > 1:
-                p2p.add(o * n_l * c_l * h_l * wordsize)
-                p2p.add(o * n_l * f_l * h_l * wordsize)
             h_out_l = layer.h_out // max(d.ways("H", mesh_shape), 1)
             w_out_l = layer.w_out // max(d.ways("W", mesh_shape), 1)
+            # dL/dy halos run at the *output* extents (layer_cost's
+            # halo_dy), so strided layers sample the smaller message too
+            if o and d.ways("H", mesh_shape) > 1:
+                p2p.add(o * n_l * c_l * w_l * wordsize)      # halo on x
+                p2p.add(o * n_l * f_l * w_out_l * wordsize)  # halo on dL/dy
+            if o and d.ways("W", mesh_shape) > 1:
+                p2p.add(o * n_l * c_l * h_l * wordsize)
+                p2p.add(o * n_l * f_l * h_out_l * wordsize)
             if p_c > 1:
                 coll.add(n_l * layer.f * h_out_l * w_out_l * wordsize)
             if p_f > 1:
@@ -339,6 +412,7 @@ class Calibration:
                 f"peak {m.peak_flops/1e9:.1f} GFLOP/s "
                 f"(eff {m.compute_efficiency:.2f}, "
                 f"halfwork {m.eff_halfwork:.2e}), "
+                f"capacity {m.mem_capacity/2**30:.1f} GiB/device, "
                 f"mem {m.mem_bw/1e9:.1f} GB/s, "
                 f"p2p a={m.alpha*1e6:.1f}us b=1/{1/m.beta/1e9:.2f}GB/s, "
                 f"coll a={m.alpha_coll*1e6:.1f}us "
@@ -443,7 +517,8 @@ def calibrate(specs: Sequence[ConvLayer], mesh, *,
         alpha=alpha, beta=beta,
         alpha_coll=alpha_coll, beta_coll=beta_coll,
         wordsize=base.wordsize,
-        compute_efficiency=eff, eff_halfwork=halfwork)
+        compute_efficiency=eff, eff_halfwork=halfwork,
+        mem_capacity=detect_mem_capacity())
 
     meta = {
         "backend": jax.default_backend(),

@@ -23,7 +23,7 @@ import math
 from typing import Callable, Mapping, Sequence
 
 from repro.core.distribution import Dist
-from repro.utils import cdiv
+from repro.utils import cdiv, human_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -48,6 +48,12 @@ class Machine:
     # small-kernel saturation the paper captures by measuring cuDNN
     # directly ("local convolution kernels not scaling linearly", §VI-B1).
     eff_halfwork: float = 0.0
+    # per-device memory capacity in bytes (0 = unknown/unlimited).  The
+    # planning layers treat this as the §VI Table-2 forcing function:
+    # sample parallelism cannot reduce per-device activations below one
+    # sample, so large-sample workloads are *unreachable* without the
+    # spatial/hybrid decompositions a capacity-constrained solve picks.
+    mem_capacity: float = 0.0
 
 
 # Lassen (paper's machine): V100 fp32 ~15.7 TF; NVLINK2 ~150 GB/s/dir
@@ -57,13 +63,13 @@ class Machine:
 LASSEN = Machine("lassen-v100", peak_flops=15.7e12, mem_bw=900e9,
                  alpha=4.0e-6, beta=1 / 21.0e9,
                  alpha_coll=6.0e-6, beta_coll=1 / 21.0e9, wordsize=4,
-                 compute_efficiency=0.50)
+                 compute_efficiency=0.50, mem_capacity=16e9)
 
 # TPU v5e (the build target): constants given by the assignment.
 TPU_V5E = Machine("tpu-v5e", peak_flops=197e12, mem_bw=819e9,
                   alpha=1.0e-6, beta=1 / 50.0e9,
                   alpha_coll=1.0e-6, beta_coll=1 / 50.0e9, wordsize=2,
-                  compute_efficiency=0.55)
+                  compute_efficiency=0.55, mem_capacity=16e9)
 
 
 # ---------------------------------------------------------------------------
@@ -311,7 +317,11 @@ def layer_cost(m: Machine, layer: ConvLayer, dist: Dist,
     c_bpx = layer.c if p_f > 1 else c_l
     bpx_comp = conv_compute_time(m, layer, n_l, c_bpx, h_l, w_l, f_l, table,
                                  eff)
-    halo_dy = _halo_time(m, layer.o, n_l, f_l, h_l, w_l, h_hops, w_hops)
+    # dL/dy lives at the *output* extents (h_out/w_out): for strided layers
+    # the backward halo messages are stride-times smaller than the forward
+    # ones — using the input extents here over-charged BPx comm.
+    halo_dy = _halo_time(m, layer.o, n_l, f_l, h_out_l, w_out_l,
+                         h_hops, w_hops)
     if p_f > 1:
         halo_dy += reduce_scatter_time(
             m, p_f, n_l * layer.c * h_l * w_l * m.wordsize)
@@ -367,6 +377,150 @@ def cf_mode_for(layer: ConvLayer, dist: Dist,
     ROADMAP PR-2 leftover: stop picking CF mode blindly)."""
     words = cf_collective_words(layer, dist, mesh_shape)
     return "filter" if words["ag_x"] < words["rs_y"] else "channel"
+
+
+# ---------------------------------------------------------------------------
+# per-device memory under a distribution (the §VI Table-2 forcing function)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LayerMemory:
+    """Per-device resident bytes of one layer under a distribution — the
+    memory companion of LayerCost.  All fields are bytes on ONE device.
+
+    `stash` is what the layer leaves resident for the backward pass,
+    calibrated against XLA buffer assignments of the compiled runtime:
+    the input activation (dL/dw contracts against x; max-pool backward
+    needs its input), the halo-extended input copy autodiff saves inside
+    the shard_map (its conv-transpose primal), and the pre-BN output (BN
+    backward) — 2 x act_in + act_out.  The post-ReLU tensor is the next
+    layer's act_in, counted there.  The stash *contains* the act_in/
+    act_out working buffers, so `total` adds it (not them) on top of the
+    persistent words and communication scratch; `network_memory`
+    accumulates it across layers — the residency that dominates
+    whole-network peaks.
+    """
+    weights: float = 0.0      # resident weight shard (replicated unless CF)
+    grads: float = 0.0        # dL/dw, sharded like the weights
+    opt: float = 0.0          # optimizer state (opt_words x weight words)
+    act_in: float = 0.0       # input activation shard (local extents)
+    act_out: float = 0.0      # output activation shard (h_out/w_out extents)
+    stash: float = 0.0        # fwd residency for backward (2*act_in+act_out)
+    halo: float = 0.0         # neighbor-halo recv buffers (max of fwd/bwd)
+    cf: float = 0.0           # CF AG(x)/RS(y) staging buffer (executed mode)
+
+    @property
+    def persistent(self) -> float:
+        """Bytes resident for the whole step (weights + grads + opt)."""
+        return self.weights + self.grads + self.opt
+
+    @property
+    def transient(self) -> float:
+        """Communication scratch live only while this layer runs."""
+        return self.halo + self.cf
+
+    @property
+    def total(self) -> float:
+        """This layer's own resident set — the per-layer solver constraint:
+        persistent words + the backward stash (which includes the act_in/
+        act_out working buffers) + communication scratch."""
+        return self.persistent + self.stash + self.transient
+
+    def breakdown(self) -> str:
+        parts = [(k, getattr(self, k))
+                 for k in ("weights", "grads", "opt", "act_in", "act_out",
+                           "halo", "cf")]
+        return " ".join(f"{k}={human_bytes(v)}" for k, v in parts if v)
+
+
+def layer_memory(m: Machine, layer: ConvLayer, dist: Dist,
+                 mesh_shape: Mapping[str, int],
+                 opt_words: float = 1.0) -> LayerMemory:
+    """Per-device memory footprint of `layer` under `dist` (bytes).
+
+    Accounts, per shard: weights (replicated across sample/spatial
+    processors; C/F-sharded by the CF group size under a CF dist — both
+    §III-D modes hold weight_words/p_cf resident), input/output activations
+    at the sharded extents (outputs at h_out/w_out — pooling and strided
+    layers shrink, matching act_words), the forward stash kept for
+    backward, halo recv buffers (the core.halo geometry: lo+hi slabs per
+    split dim plus the 4 corner blocks when both H and W split; product
+    axes divide the extents through dist.ways, so the buffers are
+    hop-count independent), the CF collective staging buffer of the mode
+    the runtime executes (cf_mode_for's min), and gradient + optimizer
+    words (`opt_words` per weight word; SGD+momentum = 1, Adam = 2).
+    """
+    ws = m.wordsize
+    n_l = layer.n / max(dist.ways("N", mesh_shape), 1)
+    h_l = layer.h / max(dist.ways("H", mesh_shape), 1)
+    w_l = layer.w / max(dist.ways("W", mesh_shape), 1)
+    c_l = layer.c / max(dist.ways("C", mesh_shape), 1)
+    f_l = layer.f / max(dist.ways("F", mesh_shape), 1)
+    h_out_l = layer.h_out / max(dist.ways("H", mesh_shape), 1)
+    w_out_l = layer.w_out / max(dist.ways("W", mesh_shape), 1)
+    p_cf = max(dist.ways("C", mesh_shape), dist.ways("F", mesh_shape))
+
+    mem = LayerMemory()
+    w_words = layer.weight_words() / max(p_cf, 1)
+    mem.weights = w_words * ws
+    mem.grads = w_words * ws
+    mem.opt = opt_words * w_words * ws
+    mem.act_in = n_l * c_l * h_l * w_l * ws
+    mem.act_out = n_l * f_l * h_out_l * w_out_l * ws
+    mem.stash = 2 * mem.act_in + mem.act_out
+
+    o = layer.o
+    h_split = dist.ways("H", mesh_shape) > 1
+    w_split = dist.ways("W", mesh_shape) > 1
+    if o and (h_split or w_split):
+        # forward halo carries C channels at input extents; the backward
+        # halo carries F channels of dL/dy at output extents.  They do not
+        # coexist, so the resident buffer is the max of the two.
+        halo_x = halo_dy = 0.0
+        if h_split:
+            halo_x += 2 * o * n_l * c_l * w_l
+            halo_dy += 2 * o * n_l * f_l * w_out_l
+        if w_split:
+            halo_x += 2 * o * n_l * c_l * h_l
+            halo_dy += 2 * o * n_l * f_l * h_out_l
+        if h_split and w_split:
+            halo_x += 4 * o * o * n_l * c_l
+            halo_dy += 4 * o * o * n_l * f_l
+        mem.halo = max(halo_x, halo_dy) * ws
+    if p_cf > 1:
+        # the staging buffer of the executed §III-D mode: 'filter' holds
+        # the gathered full-C x, 'channel' the full-F partial y before its
+        # reduce-scatter — cf_mode_for picks whichever is smaller.
+        words = cf_collective_words(layer, dist, mesh_shape)
+        mem.cf = min(words["ag_x"], words["rs_y"]) * ws
+    return mem
+
+
+def network_memory(m: Machine, layers: Sequence[ConvLayer],
+                   dists: Sequence[Dist], mesh_shape: Mapping[str, int],
+                   opt_words: float = 1.0) -> dict:
+    """Per-device peak resident bytes for a network under per-layer dists.
+
+    The rollup mirrors a training step's residency: every layer's
+    weights/grads/optimizer words are live throughout; walking forward,
+    layer i's working set (act_in/out, halo, CF staging) coexists with the
+    stashed activations of all *earlier* layers — the accumulation that
+    makes large-sample workloads unreachable under sample parallelism
+    (paper §VI, Table 2).  Returns per-layer LayerMemory breakdowns plus
+    `peak_bytes` and the layer where the peak occurs.
+    """
+    assert len(layers) == len(dists)
+    mems = [layer_memory(m, l, d, mesh_shape, opt_words)
+            for l, d in zip(layers, dists)]
+    persistent = sum(lm.persistent for lm in mems)
+    peak, peak_layer, stash_acc = 0.0, None, 0.0
+    for l, lm in zip(layers, mems):
+        stash_acc += lm.stash          # this layer's working set included
+        live = persistent + stash_acc + lm.transient
+        if live > peak:
+            peak, peak_layer = live, l.name
+    return {"per_layer": mems, "persistent_bytes": persistent,
+            "peak_bytes": peak, "peak_layer": peak_layer}
 
 
 def shuffle_time(m: Machine, layer: ConvLayer, d_i: Dist, d_j: Dist,

@@ -50,9 +50,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.channel_conv import CFSharding
 from repro.core.distribution import Dist
 from repro.core.perfmodel import (ConvLayer, EmpiricalTable, Machine,
-                                  cf_mode_for, network_cost)
+                                  cf_mode_for, layer_memory, network_cost,
+                                  network_memory)
 from repro.core.spatial_conv import ConvSharding
-from repro.core.strategy import candidate_dists, solve_dag, solve_line
+from repro.core.strategy import (CapacityError, candidate_dists, solve_dag,
+                                 solve_line)
+from repro.utils import human_bytes
 
 
 class PlanError(ValueError):
@@ -305,6 +308,14 @@ class NetworkPlan:
                 f"(fp {self.predicted['fp']*1e3:.3f} + "
                 f"shuffle {self.predicted['shuffle']*1e3:.3f} + "
                 f"bp {self.predicted['bp']*1e3:.3f})")
+            mem = self.predicted.get("memory")
+            if mem is not None:
+                lim = mem.get("limit_bytes")
+                head.append(
+                    f"  predicted peak memory: "
+                    f"{human_bytes(mem['peak_bytes'])}/device at "
+                    f"{mem['peak_layer']!r}"
+                    + (f" (limit {human_bytes(lim)})" if lim else ""))
         return "\n".join(head + rows)
 
 
@@ -331,7 +342,9 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
                  graph=None, machine: Machine | None = None,
                  table: EmpiricalTable | None = None,
                  overlap: bool = True,
-                 cost_specs: Sequence[ConvLayer] | None = None
+                 cost_specs: Sequence[ConvLayer] | None = None,
+                 mem_limit: float | None = None,
+                 opt_words: float = 1.0
                  ) -> NetworkPlan:
     """Lower a solved distribution map into an executable NetworkPlan.
 
@@ -342,7 +355,16 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
     machine: if given, attach the §V-B cost report under the *compiled*
              (post-demotion) distributions, evaluated over `cost_specs`
              (default: `specs`) — branchy networks pass their main path so
-             side branches are not costed as line continuations.
+             side branches are not costed as line continuations.  The report
+             carries the §VI memory rollup too (predicted['memory']:
+             per-layer LayerMemory breakdowns + peak_bytes/peak_layer).
+    mem_limit: per-device capacity in bytes.  The compiled (post-demotion)
+             plan is validated against it: a plan whose per-layer resident
+             set or whole-network peak exceeds the limit raises PlanError
+             with the offending layers' footprint breakdowns, and demotion
+             notes record when a demotion itself violates capacity (a
+             geometry demotion can *grow* the footprint — the layer falls
+             back to a coarser split).
     """
     mesh_shape = _mesh_shape(mesh)
     gm = _geom_mesh(mesh_shape)
@@ -392,6 +414,16 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
                 # RS(y) at the sub-mesh shard shapes (perfmodel).
                 sh = dataclasses.replace(
                     sh, mode=cf_mode_for(spec, d, mesh_shape))
+        if note and machine is not None and mem_limit and mesh_shape:
+            # a demotion falls back to a *coarser* split, so it can grow
+            # the footprint past capacity — record that in the note (the
+            # whole-plan validation below then raises with the breakdown)
+            lm = layer_memory(machine, spec, d, mesh_shape, opt_words)
+            if lm.total > mem_limit:
+                note += (f"; demotion violates capacity: "
+                         f"{human_bytes(lm.total)} > "
+                         f"{human_bytes(mem_limit)}/device "
+                         f"({lm.breakdown()})")
         if graph is not None:
             preds = [final[p] for p in graph.predecessors(spec.name)
                      if p in final]
@@ -404,10 +436,42 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
         final[spec.name] = d
 
     predicted = None
+    if mem_limit and machine is None:
+        raise PlanError("mem_limit validation needs a `machine` (the memory "
+                        "model's wordsize and accounting live there)")
     if machine is not None and mesh_shape:
         cs = list(cost_specs if cost_specs is not None else specs)
         predicted = network_cost(machine, cs, [final[l.name] for l in cs],
                                  mesh_shape, table, overlap)
+        # memory rolls up over ALL compiled layers — a side branch's
+        # weights and stashes are resident too, so branchy networks must
+        # not escape the capacity validation just because the TIME report
+        # is evaluated over the main path (cost_specs) only.
+        mem = network_memory(machine, list(specs),
+                             [final[l.name] for l in specs],
+                             mesh_shape, opt_words)
+        mem["per_layer"] = {l.name: lm
+                            for l, lm in zip(specs, mem["per_layer"])}
+        mem["limit_bytes"] = mem_limit
+        predicted["memory"] = mem
+        if mem_limit:
+            over = [(name, lm) for name, lm in mem["per_layer"].items()
+                    if lm.total > mem_limit]
+            if over or mem["peak_bytes"] > mem_limit:
+                lines = [f"  {name}: {human_bytes(lm.total)} "
+                         f"({lm.breakdown()})" for name, lm in (
+                             over or [(mem["peak_layer"],
+                                       mem["per_layer"][mem["peak_layer"]])])]
+                notes = [f"  {lp.name}: {lp.note}"
+                         for lp in compiled.values()
+                         if "violates capacity" in lp.note]
+                raise PlanError(
+                    f"compiled plan does not fit the "
+                    f"{human_bytes(mem_limit)}/device memory limit: "
+                    f"predicted peak {human_bytes(mem['peak_bytes'])} at "
+                    f"layer {mem['peak_layer']!r}; offending per-layer "
+                    f"footprints (weights/acts/halo/grads):\n"
+                    + "\n".join(lines + notes))
     return NetworkPlan(layers=compiled, predicted=predicted)
 
 
@@ -415,41 +479,102 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
 # solve + compile in one step
 # ---------------------------------------------------------------------------
 
+# the per-layer capacity constraint (strategy.prune_by_memory) bounds each
+# layer's own resident set, but the whole-network peak also accumulates the
+# forward stashes of earlier layers — so a per-layer-feasible solve can
+# still overflow.  plan_line/plan_graph close that gap by re-solving with a
+# tightened per-layer budget, scaled by the overflow ratio, a few times.
+_MEM_REFINE_ROUNDS = 4
+
+
+def _solve_under_limit(solve, compile_, mem_limit):
+    """Shared capacity refinement loop: `solve(per_layer_limit)` returns a
+    dist map, `compile_(dists, validate)` a NetworkPlan whose predicted
+    memory is inspected.  Raises PlanError/CapacityError when no fitting
+    plan is found within the refinement budget."""
+    if not mem_limit:
+        return compile_(solve(None), None)
+    limit, dists = mem_limit, None
+    for _ in range(_MEM_REFINE_ROUNDS):
+        try:
+            dists = solve(limit)
+        except CapacityError:
+            if dists is None:
+                raise              # infeasible at the user's own limit
+            break                  # tightened past the per-layer floors
+        plan = compile_(dists, None)
+        if plan.predicted["memory"]["peak_bytes"] <= mem_limit:
+            # the network peak bounds every per-layer resident set, so the
+            # fit is already proven — record the limit, no recompile
+            plan.predicted["memory"]["limit_bytes"] = mem_limit
+            return plan
+        # overflow: the stash accumulation ate the headroom — tighten the
+        # per-layer budget proportionally and re-solve
+        limit *= 0.9 * mem_limit / plan.predicted["memory"]["peak_bytes"]
+    return compile_(dists, mem_limit)          # raises with the breakdown
+
+
 def plan_line(machine: Machine, specs: Sequence[ConvLayer], mesh, *,
               table: EmpiricalTable | None = None, overlap: bool = True,
               allow_w_split: bool = True,
-              allow_channel_filter: bool = True) -> NetworkPlan:
+              allow_channel_filter: bool = True,
+              mem_limit: float | None = None,
+              opt_words: float = 1.0) -> NetworkPlan:
     """Line networks (meshnet): §V-C shortest path over executable
     candidates (sample, spatial and channel/filter), compiled to a
-    NetworkPlan."""
+    NetworkPlan.
+
+    `mem_limit` (bytes/device) makes the solve memory-aware: min-time
+    subject to every layer's resident set AND the whole-network peak
+    (stash accumulation included) fitting — the §VI Table-2 capability.
+    """
     mesh_shape = _mesh_shape(mesh)
     cands = [executable_candidates(l, mesh_shape, allow_w_split,
                                    allow_channel_filter)
              for l in specs]
-    res = solve_line(machine, specs, cands, mesh_shape, table, overlap)
-    return compile_plan(res.dists, specs, mesh, machine=machine,
-                        table=table, overlap=overlap)
+
+    def solve(limit):
+        return solve_line(machine, specs, cands, mesh_shape, table, overlap,
+                          mem_limit=limit, opt_words=opt_words).dists
+
+    def compile_(dists, validate_limit):
+        return compile_plan(dists, specs, mesh, machine=machine,
+                            table=table, overlap=overlap,
+                            mem_limit=validate_limit, opt_words=opt_words)
+
+    return _solve_under_limit(solve, compile_, mem_limit)
 
 
 def plan_graph(machine: Machine, graph, specs: Sequence[ConvLayer], mesh, *,
                table: EmpiricalTable | None = None,
                overlap: bool = True,
                allow_w_split: bool = True,
-               allow_channel_filter: bool = True) -> NetworkPlan:
+               allow_channel_filter: bool = True,
+               mem_limit: float | None = None,
+               opt_words: float = 1.0) -> NetworkPlan:
     """Branchy networks (ResNet): §V-C longest-path-first over the DAG.
 
     `specs` fixes the execution/validation order and may be a subset of the
     graph (e.g. the main path); side-branch nodes present in the graph but
     not in `specs` are compiled too, ordered after their predecessors.
+    `mem_limit` applies the same capacity constraint as plan_line.
     """
     mesh_shape = _mesh_shape(mesh)
-    dists = solve_dag(machine, graph, mesh_shape, table, overlap,
-                      candidate_fn=lambda l: executable_candidates(
-                          l, mesh_shape, allow_w_split,
-                          allow_channel_filter))
     names = [l.name for l in specs]
     extra = [n for n in graph.nodes if n not in set(names)]
     all_specs = list(specs) + [graph.nodes[n]["layer"] for n in extra]
-    return compile_plan(dists, all_specs, mesh, graph=graph,
-                        machine=machine, table=table, overlap=overlap,
-                        cost_specs=specs)
+
+    def solve(limit):
+        return solve_dag(machine, graph, mesh_shape, table, overlap,
+                         candidate_fn=lambda l: executable_candidates(
+                             l, mesh_shape, allow_w_split,
+                             allow_channel_filter),
+                         mem_limit=limit, opt_words=opt_words)
+
+    def compile_(dists, validate_limit):
+        return compile_plan(dists, all_specs, mesh, graph=graph,
+                            machine=machine, table=table, overlap=overlap,
+                            cost_specs=specs, mem_limit=validate_limit,
+                            opt_words=opt_words)
+
+    return _solve_under_limit(solve, compile_, mem_limit)

@@ -28,12 +28,47 @@ import networkx as nx
 
 from repro.core.distribution import Dist
 from repro.core.perfmodel import (ConvLayer, EmpiricalTable, Machine,
-                                  layer_cost, shuffle_time)
+                                  layer_cost, layer_memory, shuffle_time)
+from repro.utils import human_bytes
+
+
+class CapacityError(ValueError):
+    """No candidate distribution of some layer fits the per-device memory
+    limit.  Follows core.plan.PlanError's diagnostics discipline: messages
+    name the layer and report its smallest-achievable footprint, which
+    distribution achieves it, and the footprint breakdown — so users can
+    see whether the wall is weights, activations, halo or gradients."""
 
 
 # ---------------------------------------------------------------------------
 # candidate generation
 # ---------------------------------------------------------------------------
+
+def prune_by_memory(m: Machine, layer: ConvLayer,
+                    candidates: Sequence[Dist],
+                    mesh_shape: Mapping[str, int],
+                    mem_limit: float | None,
+                    opt_words: float = 1.0) -> list[Dist]:
+    """Drop candidate dists whose per-layer resident set exceeds
+    `mem_limit` bytes/device (perfmodel.layer_memory) — the capacity
+    constraint of the memory-aware solve.  Raises CapacityError when
+    *nothing* fits, naming the layer and the smallest-achievable footprint
+    (this is how the paper's 'unreachable' workloads surface: sample
+    parallelism cannot reduce per-device activations below one sample)."""
+    if not mem_limit or mem_limit <= 0:
+        return list(candidates)
+    mems = [(layer_memory(m, layer, d, mesh_shape, opt_words), d)
+            for d in candidates]
+    kept = [d for lm, d in mems if lm.total <= mem_limit]
+    if not kept:
+        best_mem, best = min(mems, key=lambda md: md[0].total)
+        raise CapacityError(
+            f"layer {layer.name!r}: no candidate distribution fits the "
+            f"{human_bytes(mem_limit)}/device memory limit; smallest "
+            f"achievable footprint is {human_bytes(best_mem.total)} "
+            f"under dist {best.name!r} ({best_mem.breakdown()})")
+    return kept
+
 
 def candidate_dists(layer: ConvLayer, mesh_shape: Mapping[str, int],
                     allow_channel_filter: bool = False,
@@ -97,10 +132,22 @@ def solve_line(m: Machine, layers: Sequence[ConvLayer],
                candidates: Sequence[Sequence[Dist]],
                mesh_shape: Mapping[str, int],
                table: EmpiricalTable | None = None,
-               overlap: bool = True) -> StrategyResult:
-    """DP shortest path over the candidate-distribution DAG."""
+               overlap: bool = True,
+               mem_limit: float | None = None,
+               opt_words: float = 1.0) -> StrategyResult:
+    """DP shortest path over the candidate-distribution DAG.
+
+    With `mem_limit` (bytes/device) the solve is min-time *subject to*
+    every layer's resident set fitting: infeasible dists are pruned from
+    the candidate sets (prune_by_memory), and a layer with no fitting
+    candidate raises CapacityError with its footprint diagnostics.
+    """
     n = len(layers)
     assert n and all(candidates), "every layer needs >= 1 candidate"
+    if mem_limit:
+        candidates = [prune_by_memory(m, layers[i], candidates[i],
+                                      mesh_shape, mem_limit, opt_words)
+                      for i in range(n)]
     lcost = [[layer_cost(m, layers[i], d, mesh_shape, table, overlap).total
               for d in candidates[i]] for i in range(n)]
 
@@ -139,12 +186,15 @@ def solve_dag(m: Machine, graph: nx.DiGraph,
               table: EmpiricalTable | None = None,
               overlap: bool = True,
               allow_channel_filter: bool = False,
-              candidate_fn=None) -> dict[str, Dist]:
+              candidate_fn=None,
+              mem_limit: float | None = None,
+              opt_words: float = 1.0) -> dict[str, Dist]:
     """graph: DiGraph whose nodes carry a 'layer': ConvLayer attribute.
 
     `candidate_fn(layer) -> [Dist]` overrides the default candidate
     generation — the plan compiler (core.plan) uses it to restrict the search
-    to distributions the runtime can execute.
+    to distributions the runtime can execute.  `mem_limit` applies the
+    per-device capacity constraint to every path solve (see solve_line).
 
     Returns {layer name: Dist}.
     """
@@ -166,7 +216,8 @@ def solve_dag(m: Machine, graph: nx.DiGraph,
         layers = [graph.nodes[p]["layer"] for p in path]
         cands = [[fixed[p]] if p in fixed else candidate_fn(layers[i])
                  for i, p in enumerate(path)]
-        res = solve_line(m, layers, cands, mesh_shape, table, overlap)
+        res = solve_line(m, layers, cands, mesh_shape, table, overlap,
+                         mem_limit=mem_limit, opt_words=opt_words)
         for p, d in zip(path, res.dists):
             fixed.setdefault(p, d)
         # de-prioritize the fixed path so the next longest path is found

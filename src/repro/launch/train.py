@@ -42,16 +42,33 @@ from repro.utils import BF16, FP32, human_count, tree_num_params
 logging.basicConfig(level=logging.INFO)
 
 
+def parse_mem_limit(value) -> float | None:
+    """--mem-limit BYTES|auto -> bytes/device (None = unconstrained).
+    'auto' detects the live device's capacity (accelerators report it via
+    memory_stats; hosts fall back to a MemAvailable share —
+    core.calibrate.detect_mem_capacity)."""
+    if value is None:
+        return None
+    if str(value).lower() == "auto":
+        from repro.core.calibrate import detect_mem_capacity
+        return detect_mem_capacity()
+    return float(value)
+
+
 def build_cnn_plan(args, arch, cfg, mesh, ba):
     """--strategy uniform: the legacy one-ConvSharding-everywhere plan.
     --strategy auto: run the §V-C optimizer on the arch's layer DAG and
     compile the solved per-layer distributions (core.plan).  With
     --calibrate the optimizer solves on *measured* costs: a calibration
     (core.calibrate) is loaded from the given path when it exists, else
-    microbenchmarked on the live backend and written there."""
+    microbenchmarked on the live backend and written there.  With
+    --mem-limit the solve is memory-aware: min-time subject to every
+    layer's resident set (and the network peak) fitting the per-device
+    capacity — the paper's §VI Table-2 'unreachable workloads' lever."""
     from repro.core import plan as plan_lib
     from repro.core.perfmodel import TPU_V5E
     from repro.core.spatial_conv import ConvSharding
+    from repro.utils import human_bytes
     if arch == "resnet50":
         from repro.models.cnn import resnet as M
         specs = M.layer_specs(args.batch, cfg)
@@ -77,16 +94,24 @@ def build_cnn_plan(args, arch, cfg, mesh, ba):
         print(f"calibration ready ({time.time() - t0:.2f}s, "
               f"{len(cal.table)} table entries)")
         machine, table = cal.machine, cal.table
+    mem_limit = parse_mem_limit(args.mem_limit)
+    if mem_limit and args.strategy != "auto":
+        logging.warning("--mem-limit constrains the --strategy auto solve "
+                        "only; the uniform plan is not validated")
     if args.strategy == "auto":
         t0 = time.time()
         allow_cf = not args.no_cf
+        if mem_limit:
+            print(f"memory limit: {human_bytes(mem_limit)}/device")
         if graph is not None:
             plan = plan_lib.plan_graph(machine, graph, specs, mesh,
                                        table=table,
-                                       allow_channel_filter=allow_cf)
+                                       allow_channel_filter=allow_cf,
+                                       mem_limit=mem_limit)
         else:
             plan = plan_lib.plan_line(machine, specs, mesh, table=table,
-                                      allow_channel_filter=allow_cf)
+                                      allow_channel_filter=allow_cf,
+                                      mem_limit=mem_limit)
         print(f"strategy optimizer ({time.time() - t0:.2f}s):")
         print(plan.describe())
     else:
@@ -130,6 +155,9 @@ def build(args, mesh):
         from repro.models.lm.modules import ShardCtx
         if args.calibrate:
             logging.warning("--calibrate covers the CNN archs only; "
+                            "ignored for %s", arch)
+        if args.mem_limit:
+            logging.warning("--mem-limit covers the CNN archs only; "
                             "ignored for %s", arch)
         cfg = registry.get(arch, smoke=args.smoke)
         ctx = ShardCtx(mesh=mesh, seq_axis="model", batch_axes=ba)
@@ -181,6 +209,16 @@ def main():
                          "the §V-C solver.  PATH (default "
                          "BENCH_calibration.json) is loaded when it exists, "
                          "else written — CNN archs only")
+    ap.add_argument("--mem-limit", nargs="?", const="auto", default=None,
+                    metavar="BYTES|auto",
+                    help="per-device memory capacity for --strategy auto: "
+                         "the §V-C solve becomes min-time subject to every "
+                         "layer's resident set fitting (core.perfmodel."
+                         "layer_memory), unlocking workloads sample "
+                         "parallelism cannot fit (paper §VI Table 2).  "
+                         "'auto' (the bare-flag default) detects the live "
+                         "device capacity; an integer sets a synthetic "
+                         "limit in bytes — CNN archs only")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)

@@ -3,7 +3,7 @@ process keeps a single CPU device (the 512-device env is dry-run-only).
 
 Usage:  python tests/dist_checks.py <group>
 Groups: conv | attention | ssm | models | train | compress | plan | cf |
-        spatial2d | multiaxis
+        spatial2d | multiaxis | memfit
 Exits 0 on success; any assertion failure exits non-zero.
 """
 import os
@@ -777,6 +777,82 @@ def check_multiaxis():
     np.testing.assert_allclose(float(got_l), float(ref_l), rtol=2e-5)
 
 
+def check_memfit():
+    """Memory-aware planning acceptance (paper §VI, Table 2): on a 2x2
+    host mesh with a synthetic per-device capacity limit chosen so the
+    uniform sample-parallel plan cannot fit (batch < devices: sample
+    parallelism cannot reduce per-device memory below one sample), the
+    --mem-limit solve returns a spatial/hybrid plan whose modeled peak
+    fits, whose XLA-measured peak agrees with the model within the
+    property-test tolerance (2x), and which executes fwd + bwd matching
+    the single-device oracle."""
+    from repro.core import calibrate as calib
+    from repro.core import plan as plan_lib
+    from repro.core.distribution import Dist
+    from repro.core.perfmodel import TPU_V5E, network_memory
+    from repro.core.spatial_conv import ConvSharding
+    from repro.core.strategy import CapacityError, prune_by_memory
+    from repro.data.pipeline import synthetic_mesh_batch
+    from repro.models.cnn import meshnet
+
+    mesh = make_mesh(data=2, model=2)
+    ms = dict(mesh.shape)
+    cfg = meshnet.MeshNetConfig("t", input_hw=32, in_channels=4,
+                                convs_per_block=1, widths=(8, 16),
+                                bn_scope="global")
+    BATCH = 2        # < 4 devices: sample parallelism caps at 2-way
+    specs = meshnet.layer_specs(cfg, BATCH)
+
+    # the best sample-only residency (2-way N) must NOT fit the limit
+    sample = [Dist("sample", {"N": ("data",)})] * len(specs)
+    sample_peak = network_memory(TPU_V5E, specs, sample, ms)["peak_bytes"]
+    limit = 0.75 * sample_peak
+    assert sample_peak > limit
+
+    plan = plan_lib.plan_line(TPU_V5E, specs, mesh, mem_limit=limit)
+    mem = plan.predicted["memory"]
+    assert mem["peak_bytes"] <= limit, plan.describe()
+    assert mem["limit_bytes"] == limit
+    # the fit must have been bought with spatial decomposition
+    assert any(lp.sharding.is_spatial for lp in plan.layers.values()), \
+        plan.describe()
+
+    # a hopeless limit raises CapacityError with footprint diagnostics
+    try:
+        prune_by_memory(TPU_V5E, specs[0],
+                        [Dist("sample", {"N": ("data",)})], ms, 64.0)
+        raise AssertionError("expected CapacityError")
+    except CapacityError as e:
+        assert "conv1_1" in str(e) and "act_in" in str(e), e
+
+    # XLA cross-check + oracle equivalence of the executed plan
+    params = meshnet.init(jax.random.PRNGKey(0), cfg)
+    batch = {k: jnp.asarray(v) for k, v in
+             synthetic_mesh_batch(0, BATCH, 32, 4, out_hw=8).items()}
+    ref_l = meshnet.loss_fn(params, batch, cfg, ConvSharding())
+    ref_g = jax.grad(lambda p: meshnet.loss_fn(
+        p, batch, cfg, ConvSharding()))(params)
+    first = specs[0]
+    with mesh:
+        spec = plan.input_spec(first.name, first.h, first.w, first.k,
+                               first.s, mesh)
+        bb = dict(batch)
+        bb["image"] = jax.device_put(batch["image"],
+                                     NamedSharding(mesh, spec))
+        step = jax.jit(jax.value_and_grad(
+            lambda p, b: meshnet.loss_fn(p, b, cfg, plan, mesh)))
+        res = calib.crosscheck_memory(plan, step, params, bb)
+        assert 0.5 <= res["ratio"] <= 2.0, res
+        got_l, got_g = step(params, bb)
+    np.testing.assert_allclose(float(got_l), float(ref_l), rtol=2e-5)
+    for a, r in zip(jax.tree.leaves(got_g), jax.tree.leaves(ref_g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   rtol=3e-4, atol=3e-5)
+    print(f"memfit: limit {limit:.0f}B, sample {sample_peak:.0f}B (out), "
+          f"solved {mem['peak_bytes']:.0f}B (fits), "
+          f"xla ratio {res['ratio']:.2f}")
+
+
 def check_compress():
     from repro.optim.grad_compress import cross_pod_mean
     mesh = make_mesh(data=2, model=2, pod=2)
@@ -812,7 +888,7 @@ GROUPS = {"conv": check_conv, "attention": check_attention,
           "ssm": check_ssm, "models": check_models, "train": check_train,
           "compress": check_compress, "plan": check_plan,
           "cf": check_cf, "spatial2d": check_spatial2d,
-          "multiaxis": check_multiaxis}
+          "multiaxis": check_multiaxis, "memfit": check_memfit}
 
 if __name__ == "__main__":
     GROUPS[sys.argv[1]]()

@@ -372,3 +372,13 @@ def test_plan_multiaxis_distributed():
     layer vs the single-device oracle (dist_checks group 'multiaxis';
     fast — run by the CI fast lane like 'cf')."""
     run_dist_group("multiaxis")
+
+
+def test_plan_memfit_distributed():
+    """4-device memory-aware planning acceptance (paper §VI Table 2): a
+    synthetic per-device capacity limit rules uniform sample-parallel out;
+    the --mem-limit solve returns a spatial plan whose modeled peak fits,
+    whose XLA-measured peak agrees within the 2x property tolerance, and
+    which executes fwd+bwd matching the single-device oracle (dist_checks
+    group 'memfit'; fast — run by the CI fast lane like 'cf')."""
+    run_dist_group("memfit")
