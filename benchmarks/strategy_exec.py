@@ -30,6 +30,15 @@ uploads it and later runs reuse it), then three workloads execute:
     (= replicated) plan cannot fit but the memory-aware solve
     (plan_line mem_limit=) does; both execute, and the solved plan's
     XLA-measured peak cross-checks the memory model.
+  * overlap — the §IV-A latency-hiding A/B on ONE plan: the uniform
+    H-split plan runs overlap-on (interior/boundary split, pinned halo
+    issue order) vs force-serialized (loss_fn overlap=False: halo
+    concatenated before one full conv).  The gate enforces that the
+    schedule the calibrated η recommends (overlapped when η clears
+    channel_conv.ETA_CHUNK_THRESHOLD, serialized below it) never
+    measures slower than the rejected arm beyond tolerance — i.e. the
+    calibration picks the measured winner of its own A/B.  The measured
+    achieved-overlap η is emitted alongside the calibrated one.
 
 Output is both the legacy `name,us_per_call,derived` CSV rows and a
 machine-readable BENCH_strategy.json: per-workload measured/predicted step
@@ -83,7 +92,10 @@ def _measure_plans(cfg, batch, specs, plans, mesh, reps, rounds=4):
     warm each train step, then hand the competing steps to the shared
     interleaved comparator (benchmarks/_timing.interleaved_min) so the
     auto-vs-uniform ratio is robust to host-load drift.  Each step is
-    AOT-compiled so its XLA memory_analysis peak rides along.  Returns
+    AOT-compiled so its XLA memory_analysis peak rides along.  A plan may
+    be a (tag, plan) pair or a (tag, plan, overlap) triple — the overlap
+    flag (default True) threads to meshnet.loss_fn, which is how the
+    `overlap` workload force-serializes one arm of its A/B.  Returns
     ({tag: seconds}, {tag: measured peak bytes})."""
     import functools
     from repro.core.calibrate import compiled_peak_bytes
@@ -97,7 +109,9 @@ def _measure_plans(cfg, batch, specs, plans, mesh, reps, rounds=4):
     lbl_spec = P("data") if batch % dict(mesh.shape)["data"] == 0 else P(None)
     with mesh:
         steps, peaks = {}, {}
-        for tag, plan in plans:
+        for entry in plans:
+            tag, plan = entry[0], entry[1]
+            ov = entry[2] if len(entry) > 2 else True
             spec = plan.input_spec(first.name, first.h, first.w, first.k,
                                    first.s, mesh)
             bb = {"image": jax.device_put(b["image"],
@@ -105,8 +119,8 @@ def _measure_plans(cfg, batch, specs, plans, mesh, reps, rounds=4):
                   "label": jax.device_put(b["label"],
                                           NamedSharding(mesh, lbl_spec))}
             step = jax.jit(jax.value_and_grad(
-                lambda p, x, plan=plan: meshnet.loss_fn(p, x, cfg, plan,
-                                                        mesh)))
+                lambda p, x, plan=plan, ov=ov: meshnet.loss_fn(
+                    p, x, cfg, plan, mesh, overlap=ov)))
             compiled = step.lower(params, bb).compile()    # AOT: peak + call
             peaks[tag] = compiled_peak_bytes(compiled)
             compiled(params, bb)[0].block_until_ready()    # warm
@@ -136,7 +150,8 @@ def _bench_workload(name, cfg, batch, specs, plans, mesh, reps, rounds,
     measured, peaks = _measure_plans(cfg, batch, specs, plans, mesh, reps,
                                      rounds)
     entries = {}
-    for tag, plan in plans:
+    for entry in plans:
+        tag, plan = entry[0], entry[1]
         dt = measured[tag]
         pred = plan.predicted["total"] if plan.predicted else float("nan")
         pmem = plan.predicted["memory"]["peak_bytes"] \
@@ -229,6 +244,56 @@ def run(args) -> int:
                                    machine, table)),
          ("auto", auto)),
         mesh, args.reps, args.rounds, "uniform", "auto", agree)
+
+    # --- overlap: the §IV-A latency-hiding A/B on the SAME plan ----------
+    # one uniform H-split plan, two arms: overlap=True (interior/boundary
+    # split + pinned halo issue order) vs overlap=False (halo concatenated
+    # before one full-tile conv — nothing to hide).  The gate checks the
+    # calibration's CALL, not a fixed winner: the arm the fitted η
+    # recommends (overlap pays iff η clears the same threshold that
+    # enables CF chunking) must not measure slower than the rejected arm
+    # beyond tolerance.  On hardware whose scheduler genuinely hides the
+    # halo (high η) that means overlapped <= serialized; on a machine
+    # that cannot hide it (low η — host XLA) it means the split's
+    # overhead stays on the serialized side of tolerance.  Either way a
+    # calibration that mispredicts its own A/B fails the lane.  The
+    # measured achieved η rides into the report next to the calibrated
+    # one so the trajectory can watch them drift.
+    from repro.core.channel_conv import ETA_CHUNK_THRESHOLD
+    names = meshnet.layer_names(cfg128)
+    ov_plan = _uniform_plan(plan_lib, uni_sh, names, specs128, mesh,
+                            machine, table)
+    ser_plan = dataclasses.replace(
+        ov_plan, predicted=plan_lib.compile_plan(
+            {n: plan_lib._sharding_to_dist(uni_sh) for n in names},
+            specs128, mesh, machine=machine, table=table,
+            overlap=False).predicted)
+    overlap_pays = machine.overlap_eta >= ETA_CHUNK_THRESHOLD
+    chosen, rejected = ("overlapped", "serialized") if overlap_pays \
+        else ("serialized", "overlapped")
+    workloads["overlap"] = _bench_workload(
+        "overlap", cfg128, 2, specs128,
+        (("serialized", ser_plan, False), ("overlapped", ov_plan, True)),
+        mesh, args.reps, args.rounds, rejected, chosen,
+        {"same_plan": True, "n_layers_differ": 0, "layers_differ": [],
+         "note": "same plan both arms; the A/B toggles overlap only"})
+    workloads["overlap"]["calibrated_choice"] = chosen
+    t_ov = workloads["overlap"]["entries"]["overlapped"]["measured_s"]
+    t_ser = workloads["overlap"]["entries"]["serialized"]["measured_s"]
+    credit = sum(ov_plan.predicted.get("overlap_credit", {}).values())
+    eta_cal = machine.overlap_eta
+    hidden_at_1 = credit / eta_cal if eta_cal > 0 else 0.0
+    eta_meas = min(max((t_ser - t_ov) / hidden_at_1, 0.0), 1.0) \
+        if hidden_at_1 > 0 else None
+    workloads["overlap"]["eta"] = {
+        "calibrated": eta_cal,
+        "measured": eta_meas,
+        "predicted_hidden_s": credit,
+        "measured_hidden_s": t_ser - t_ov,
+    }
+    print(f"# overlap: serialized {t_ser*1e6:.1f}us, overlapped "
+          f"{t_ov*1e6:.1f}us; eta calibrated {eta_cal:.2f}, measured "
+          + (f"{eta_meas:.2f}" if eta_meas is not None else "n/a"))
 
     # --- mesh16cf: late layers too small to split spatially (h=4 < k) but
     # channel-heavy — the §III-D sweet spot.  The auto plan should contain

@@ -44,6 +44,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import channel_conv
 from repro.core.perfmodel import (LAUNCH_OVERHEAD, ConvLayer,
                                   EmpiricalTable, Machine)
 from repro.core.plan import executable_candidates
@@ -316,6 +317,74 @@ def _bench_membw(timer: Timer, nbytes: int = 32 << 20) -> float:
     return 2 * nbytes / max(t, 1e-9)
 
 
+def _bench_overlap(mesh, axis: str, timer: Timer, rounds: int = 3,
+                   n: int = 2, c: int = 8, f: int = 8, k: int = 3) -> dict:
+    """Interleaved overlapped-vs-serialized A/B of the §IV-A schedule on
+    one mesh axis: the same H-split conv step with the interior/boundary
+    schedule on vs forced serial, plus a halo-free local conv at the shard
+    shape as the compute-only anchor.  The achieved-overlap efficiency is
+    the measured gain over the hideable min(comm, compute):
+
+        η = (t_serial − t_overlap) / min(t_serial − t_compute, t_compute)
+
+    clamped to [0, 1]; None when the comm term is too small to resolve
+    above timing noise (the sample is kept in meta for inspection but
+    excluded from the fit)."""
+    from repro.core.spatial_conv import ConvSharding, spatial_conv2d
+    p = dict(mesh.shape)[axis]
+    h_l = max(4 * k, 16)
+    h, w = h_l * p, 64
+    sh = ConvSharding(h_axis=axis)
+    x = jax.device_put(
+        jax.random.normal(jax.random.PRNGKey(0), (n, h, w, c), jnp.float32),
+        NamedSharding(mesh, sh.x_spec()))
+    wt = jax.random.normal(jax.random.PRNGKey(1), (k, k, c, f),
+                           jnp.float32) * 0.1
+    ov_fn = jax.jit(lambda x, w: spatial_conv2d(
+        x, w, strides=(1, 1), sharding=sh, mesh=mesh, overlap=True))
+    ser_fn = jax.jit(lambda x, w: spatial_conv2d(
+        x, w, strides=(1, 1), sharding=sh, mesh=mesh, overlap=False))
+    x_loc = jax.random.normal(jax.random.PRNGKey(2), (n, h_l, w, c),
+                              jnp.float32)
+    loc_fn = jax.jit(lambda x, w: lax.conv_general_dilated(
+        x, w, (1, 1), (same_pads(k, 1), same_pads(k, 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC")))
+    t_ov, t_ser = [], []
+    for _ in range(rounds):     # alternate arms so clock drift hits both
+        t_ov.append(timer(ov_fn, x, wt))
+        t_ser.append(timer(ser_fn, x, wt))
+    t_ov, t_ser = min(t_ov), min(t_ser)
+    t_loc = timer(loc_fn, x_loc, wt)
+    comm = max(t_ser - t_loc, 0.0)
+    hideable = min(comm, t_loc)
+    eta = None
+    if hideable > 0.05 * t_ser:
+        eta = min(max((t_ser - t_ov) / hideable, 0.0), 1.0)
+    return {"axis": axis, "p": p, "t_overlap": t_ov, "t_serial": t_ser,
+            "t_compute": t_loc, "eta": eta}
+
+
+def fit_eta(mesh, *, timer: Timer | None = None, reps: int = 5,
+            base: Machine = HOST_BASE) -> tuple[float, list]:
+    """Measure the achieved-overlap efficiency η (Machine.overlap_eta)
+    over every size > 1 mesh axis and take the median across axes.
+
+    Returns (base.overlap_eta, []) when `mesh` carries no live multi-device
+    axis (a plain {axis: size} mapping, or every axis of size 1): an
+    analytic calibration keeps the optimistic default rather than inventing
+    a measurement it cannot make."""
+    if timer is None:
+        timer = lambda fn, *a: time_fn(fn, *a, reps=reps)   # noqa: E731
+    mesh_shape = _mesh_shape_of(mesh)
+    real_mesh = mesh if hasattr(mesh, "devices") else None
+    axes = sorted(ax for ax, sz in mesh_shape.items() if sz > 1) \
+        if real_mesh is not None else []
+    samples = [_bench_overlap(real_mesh, ax, timer) for ax in axes]
+    etas = [s["eta"] for s in samples if s["eta"] is not None]
+    eta = float(np.median(etas)) if etas else base.overlap_eta
+    return eta, samples
+
+
 # ---------------------------------------------------------------------------
 # fitting
 # ---------------------------------------------------------------------------
@@ -414,6 +483,7 @@ class Calibration:
                 f"halfwork {m.eff_halfwork:.2e}), "
                 f"capacity {m.mem_capacity/2**30:.1f} GiB/device, "
                 f"mem {m.mem_bw/1e9:.1f} GB/s, "
+                f"overlap eta {m.overlap_eta:.2f}, "
                 f"p2p a={m.alpha*1e6:.1f}us b=1/{1/m.beta/1e9:.2f}GB/s, "
                 f"coll a={m.alpha_coll*1e6:.1f}us "
                 f"b=1/{1/m.beta_coll/1e9:.2f}GB/s")
@@ -510,6 +580,14 @@ def calibrate(specs: Sequence[ConvLayer], mesh, *,
                 if k[0] != "pool"]
     peak, eff, halfwork = _fit_compute(conv_fit, base)
     mem_bw = _bench_membw(timer)
+    # achieved-overlap efficiency η: interleaved overlapped-vs-serialized
+    # A/B per comm axis (see _bench_overlap) — what scales the solver's
+    # §IV-A overlap credit down to what this machine actually hides.
+    overlap_eta, eta_samples = fit_eta(mesh, timer=timer, base=base)
+    if eta_samples:
+        # let the runtime's chunked-CF default resolve against the
+        # measurement (channel_conv.chunks_decision)
+        channel_conv.set_measured_eta(overlap_eta)
 
     machine = Machine(
         name=f"calibrated-{jax.default_backend()}",
@@ -518,7 +596,8 @@ def calibrate(specs: Sequence[ConvLayer], mesh, *,
         alpha_coll=alpha_coll, beta_coll=beta_coll,
         wordsize=base.wordsize,
         compute_efficiency=eff, eff_halfwork=halfwork,
-        mem_capacity=detect_mem_capacity())
+        mem_capacity=detect_mem_capacity(),
+        overlap_eta=overlap_eta)
 
     meta = {
         "backend": jax.default_backend(),
@@ -532,6 +611,7 @@ def calibrate(specs: Sequence[ConvLayer], mesh, *,
                    "dropped": dropped},
         "p2p_samples": p2p_samples,
         "collective_samples": coll_samples,
+        "eta_fit": {"eta": overlap_eta, "samples": eta_samples},
         "layers": [l.name for l in specs],
     }
     return Calibration(machine=machine, table=EmpiricalTable(entries),
@@ -614,6 +694,22 @@ def load_or_run(path: str, specs: Sequence[ConvLayer], mesh, *,
         if cal.meta.get("mesh") not in (None, dict(mesh_shape)):
             print(f"calibrate: WARNING: {path} was measured on mesh "
                   f"{cal.meta['mesh']}, not {dict(mesh_shape)}")
+        if "eta_fit" not in cal.meta:
+            # a pre-η calibration file: backfill the achieved-overlap
+            # measurement now (the Machine JSON simply lacked the field and
+            # deserialized at the optimistic η=1 default) and persist it.
+            eta, samples = fit_eta(mesh, timer=kwargs.get("timer"),
+                                   reps=kwargs.get("reps", 5))
+            cal.machine = dataclasses.replace(cal.machine, overlap_eta=eta)
+            cal.meta["eta_fit"] = {"eta": eta, "samples": samples}
+            if path:
+                cal.save(path)
+            print(f"calibrate: backfilled overlap eta={eta:.2f} into {path}")
+        ef = cal.meta.get("eta_fit") or {}
+        if ef.get("samples"):
+            # loaded file carries a real measurement — install it for the
+            # runtime's chunked-CF default, same as a fresh calibrate()
+            channel_conv.set_measured_eta(ef["eta"])
         if grow_table:
             added = grow(cal, specs, mesh,
                          reps=kwargs.get("reps", 5),

@@ -36,11 +36,12 @@ Overlapped channel mode (§IV-A analogue for the hidden dimension): with
 ``overlap=True`` and ``channel_chunks > 1`` the local conv is split into
 channel blocks and each block's partial sum is reduce-scattered as it
 completes — the psum_scatter of block b pipelines with the convolution of
-block b+1, which is what the perf model's ``max(compute, comm)`` forward
-term credits CF layers with.  The chunk count defaults per backend (2 on
-TPU, 1 elsewhere — see cf_conv2d); psum_scatter is linear, so summing the
-scattered partials is numerically a reordering of the single-collective
-channel sum.
+block b+1, which is what the perf model's η-scaled overlap credit charges
+CF layers with.  The chunk count defaults from the *calibrated* achieved-
+overlap efficiency η (see chunks_decision: 2 on TPU, 2 when a measured
+η ≥ 0.5 says overlap actually pays, 1 otherwise); psum_scatter is linear,
+so summing the scattered partials is numerically a reordering of the
+single-collective channel sum.
 
 Weights stay *globally* addressed (replicated into the shard_map, sliced
 per-shard with `axis_index`): parameter trees, checkpoints and the FSDP
@@ -73,6 +74,54 @@ from repro.core.spatial_conv import (ConvSharding, _conv_nhwc, _local_conv,
 from repro.utils import same_pads, shard_map
 
 MODES = ("channel", "filter")
+
+# ---------------------------------------------------------------------------
+# calibrated chunked-CF default (replaces PR 4's hard `1 off-TPU` paper-over)
+# ---------------------------------------------------------------------------
+
+# the measured achieved-overlap efficiency (Machine.overlap_eta), installed
+# by core.calibrate whenever a calibration with live overlap samples runs or
+# loads; None means "no measurement yet — assume nothing".
+_MEASURED_ETA: float | None = None
+
+# chunking must hide at least this fraction of the hideable min(comm,
+# compute) to pay for its extra per-block collective launches and slices.
+ETA_CHUNK_THRESHOLD = 0.5
+
+
+def set_measured_eta(eta: float | None) -> None:
+    """Install (or clear with None) the calibrated η that
+    default_channel_chunks resolves against — called by core.calibrate
+    after a fit or load that carries real overlap samples."""
+    global _MEASURED_ETA
+    _MEASURED_ETA = eta
+
+
+def measured_eta() -> float | None:
+    return _MEASURED_ETA
+
+
+def chunks_decision() -> tuple[int, str]:
+    """The calibrated 'channel'-mode chunk default, with its reason.
+
+    Chunking pipelines the psum_scatter of block b with the conv of block
+    b+1, which only pays when the machine demonstrably hides collectives
+    behind compute: TPU's async collective engine does by construction;
+    elsewhere chunking needs a *measured* η ≥ ETA_CHUNK_THRESHOLD.  With no
+    calibration it stays off — PR 4 measured chunked CF as pure overhead on
+    host XLA, and that evidence (not a hardcoded backend switch) is what
+    this default now encodes."""
+    if jax.default_backend() == "tpu":
+        return 2, "tpu async collectives"
+    if _MEASURED_ETA is None:
+        return 1, "eta unmeasured"
+    if _MEASURED_ETA >= ETA_CHUNK_THRESHOLD:
+        return 2, f"measured eta {_MEASURED_ETA:.2f} >= {ETA_CHUNK_THRESHOLD}"
+    return 1, f"measured eta {_MEASURED_ETA:.2f} < {ETA_CHUNK_THRESHOLD}"
+
+
+def default_channel_chunks() -> int:
+    return chunks_decision()[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -259,10 +308,12 @@ def cf_conv2d(x, w, *, strides=(1, 1), sharding: CFSharding, mesh=None,
        channel-block split that pipelines the psum_scatter with the local
        conv (see _local_cf_conv).
     channel_chunks: 'channel'-mode block count for that split.  None (the
-       default) resolves per backend: 2 on TPU — where the latency-hiding
-       scheduler actually runs the scattered partial of block b under the
-       conv of block b+1 — and 1 elsewhere (on host CPU nothing overlaps,
-       so extra collectives are pure overhead; measured in
+       default) resolves through chunks_decision(): 2 on TPU — where the
+       latency-hiding scheduler actually runs the scattered partial of
+       block b under the conv of block b+1 — 2 when core.calibrate has
+       measured an achieved-overlap η ≥ ETA_CHUNK_THRESHOLD on this mesh,
+       and 1 otherwise (with no evidence that collectives hide behind
+       compute, extra collectives are pure overhead — measured so in
        benchmarks/strategy_exec).  Tests pass an explicit 2 to pin the
        chunked path's numerics on any backend.
     backend: 'xla' or 'pallas' — the local conv kernel (see _conv_nhwc).
@@ -296,7 +347,7 @@ def cf_conv2d(x, w, *, strides=(1, 1), sharding: CFSharding, mesh=None,
             "compile time; direct callers must pre-check "
             "CFSharding.fits_channels")
     if channel_chunks is None:
-        channel_chunks = 2 if jax.default_backend() == "tpu" else 1
+        channel_chunks = default_channel_chunks()
     fn = functools.partial(_local_cf_conv, strides=strides,
                            sharding=sharding, mesh_shape=mesh_shape,
                            overlap=overlap, backend=backend,

@@ -105,6 +105,67 @@ def halo_exchange(x, dim: int, lo: int, hi: int, axis_name,
     return lax.concatenate(parts, dimension=dim)
 
 
+@jax.custom_vjp
+def pinned(parts: tuple):
+    """``lax.optimization_barrier`` as a differentiable identity.
+
+    The primitive has no differentiation rule, but the barrier IS the
+    identity — so the VJP barriers the cotangents instead, which pins the
+    *mirrored* schedule into backprop: the boundary-gradient sends are
+    ordered against the interior dL/dx exactly as the forward halos were
+    ordered against the interior conv (§IV-A both directions).
+    """
+    return lax.optimization_barrier(parts)
+
+
+def _pinned_fwd(parts):
+    return lax.optimization_barrier(parts), None
+
+
+def _pinned_bwd(_, cts):
+    return (lax.optimization_barrier(tuple(cts)),)
+
+
+pinned.defvjp(_pinned_fwd, _pinned_bwd)
+
+
+class HaloSchedule:
+    """Latency-hiding issue order for the §III-C halo transfers (§IV-A).
+
+    Construction *issues* the halo ppermutes immediately — before any of
+    the compute that will consume them is built — so the transfers sit at
+    the top of the dataflow graph and the latency-hiding scheduler can
+    start them while independent (interior) compute runs.  `pin(interior)`
+    then ties the in-flight halo tensors to the interior result with
+    ``jax.lax.optimization_barrier``: the compiler can neither sink the
+    transfers back down past the interior conv nor hoist the boundary
+    convs (the halo consumers) above it — the §IV-A interior-first
+    schedule, pinned against reordering.  On TPU the ppermute is an async
+    collective-permute the interior conv genuinely runs under; on host/GPU
+    XLA the same dependence ordering lets the scheduler start the
+    collective's rendezvous early.
+    """
+
+    def __init__(self, x, dim: int, lo: int, hi: int, axis_name,
+                 axis_size: int):
+        self.lo, self.hi = halo_slices(x, dim, lo, hi, axis_name, axis_size)
+
+    def pin(self, interior):
+        """Barrier `interior` together with the in-flight halo tensors.
+
+        Returns (interior, halo_lo, halo_hi) with the issue order pinned:
+        everything consuming the returned halos is scheduled after the
+        interior result they were barriered with."""
+        parts = [interior] + [p for p in (self.lo, self.hi) if p is not None]
+        if len(parts) == 1:
+            return interior, self.lo, self.hi
+        out = list(pinned(tuple(parts)))
+        interior = out.pop(0)
+        lo = out.pop(0) if self.lo is not None else None
+        hi = out.pop(0) if self.hi is not None else None
+        return interior, lo, hi
+
+
 def ring_shift(x, axis_name: str, axis_size: int, reverse: bool = False):
     """Full ring rotation (used by ring attention): shard i's block moves to
     shard i+1 (mod n).  Unlike the stencil halo this wraps around."""

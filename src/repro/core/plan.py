@@ -47,8 +47,9 @@ import jax
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.channel_conv import CFSharding
+from repro.core.channel_conv import CFSharding, chunks_decision
 from repro.core.distribution import Dist
+from repro.core.halo import pinned as halo_pinned
 from repro.core.perfmodel import (ConvLayer, EmpiricalTable, Machine,
                                   cf_mode_for, layer_memory, network_cost,
                                   network_memory)
@@ -279,8 +280,15 @@ class NetworkPlan:
         lp = self.layers.get(name)
         if lp is None or not lp.reshard_in or mesh is None:
             return x
-        return lax.with_sharding_constraint(
+        y = lax.with_sharding_constraint(
             x, NamedSharding(mesh, lp.sharding.x_spec()))
+        # double-buffer the reshard point: the barrier keeps the
+        # redistributed tensor a distinct buffer instead of letting XLA
+        # fuse the collective into the consuming layer's first op — the
+        # shuffle of layer l can then run while layer l-1's tail compute
+        # is still in flight (§IV-A applied between layers, not within).
+        (y,) = halo_pinned((y,))
+        return y
 
     # -- reporting ----------------------------------------------------------
     def describe(self) -> str:
@@ -299,7 +307,12 @@ class NetworkPlan:
                 parts.append(f"CF:{sh.cf_axis}({sh.mode})")
             lay = " ".join(parts) or "replicated"
             note = f"   [{lp.note}]" if lp.note else ""
-            rows.append(f"  {lp.name:20s} {tag}{lay}{note}")
+            ov = ""
+            if self.predicted is not None:
+                credit = self.predicted.get("overlap_credit", {})
+                if credit.get(lp.name, 0.0) > 0:
+                    ov = f"   overlap -{credit[lp.name]*1e3:.3f} ms"
+            rows.append(f"  {lp.name:20s} {tag}{lay}{ov}{note}")
         head = [f"NetworkPlan: {len(self.layers)} layers, "
                 f"{self.n_reshards} reshard points"]
         if self.predicted is not None:
@@ -308,6 +321,13 @@ class NetworkPlan:
                 f"(fp {self.predicted['fp']*1e3:.3f} + "
                 f"shuffle {self.predicted['shuffle']*1e3:.3f} + "
                 f"bp {self.predicted['bp']*1e3:.3f})")
+            credit = self.predicted.get("overlap_credit")
+            if credit is not None:
+                head.append(
+                    f"  overlap credit: "
+                    f"{sum(credit.values())*1e3:.3f} ms hidden at "
+                    f"eta={self.predicted.get('overlap_eta', 1.0):.2f} "
+                    f"(per-layer rows below)")
             mem = self.predicted.get("memory")
             if mem is not None:
                 lim = mem.get("limit_bytes")
@@ -414,6 +434,12 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
                 # RS(y) at the sub-mesh shard shapes (perfmodel).
                 sh = dataclasses.replace(
                     sh, mode=cf_mode_for(spec, d, mesh_shape))
+                if sh.mode == "channel":
+                    # record the calibrated chunked-CF resolution so the
+                    # cost report says what the runtime will actually do
+                    nblk, why = chunks_decision()
+                    note = (note + "; " if note else "") + (
+                        f"cf chunks={nblk} ({why})")
         if note and machine is not None and mem_limit and mesh_shape:
             # a demotion falls back to a *coarser* split, so it can grow
             # the footprint past capacity — record that in the note (the
@@ -443,6 +469,13 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
         cs = list(cost_specs if cost_specs is not None else specs)
         predicted = network_cost(machine, cs, [final[l.name] for l in cs],
                                  mesh_shape, table, overlap)
+        # per-layer η-scaled overlap credit: the seconds of communication
+        # the schedule is credited with hiding (0 when nothing overlaps),
+        # surfaced so describe() can report the latency-hiding budget.
+        predicted["overlap_eta"] = machine.overlap_eta if overlap else 0.0
+        predicted["overlap_credit"] = {
+            l.name: c.overlap_credit
+            for l, c in zip(cs, predicted["per_layer"])}
         # memory rolls up over ALL compiled layers — a side branch's
         # weights and stashes are resident too, so branchy networks must
         # not escape the capacity validation just because the TIME report

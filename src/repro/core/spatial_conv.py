@@ -113,20 +113,24 @@ class ConvSharding:
             w_axis=fit_spatial_axis(w, self.w_axis, k, s, shape))
 
 
-def _conv_nhwc(x, w, strides, pads, backend: str = "xla"):
+def _conv_nhwc(x, w, strides, pads, backend: str = "xla",
+               interior_first: bool = False):
     """Local dense conv — the per-shard compute the paper times as cuDNN.
 
     backend='pallas' routes through the implicit-GEMM MXU kernel
     (repro.kernels.conv2d).  That kernel computes VALID convolution with one
     stride for both spatial dims, so padding is materialized first and
     unequal strides fall back to XLA.  Off-TPU it runs in interpret mode
-    (numerics-identical, for tests and CPU smoke runs).
+    (numerics-identical, for tests and CPU smoke runs).  `interior_first`
+    asks the Pallas kernel for its §IV-A schedule (boundary row blocks
+    visited last); the XLA route ignores it.
     """
     if backend == "pallas" and strides[0] == strides[1]:
         from repro.kernels.conv2d import conv2d as pallas_conv2d
         xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
         return pallas_conv2d(xp, w, stride=strides[0],
-                             interpret=jax.default_backend() != "tpu")
+                             interpret=jax.default_backend() != "tpu",
+                             interior_first=interior_first)
     return lax.conv_general_dilated(
         x, w, window_strides=tuple(strides), padding=tuple(pads),
         dimension_numbers=DIMNUMS)
@@ -148,32 +152,48 @@ def _split_dim_conv(x, w, *, dim, s, k, lo, hi, axis_name, axis_size,
         "case; use sample/channel parallelism for this layer instead")
     ho = hl // s
 
-    def conv(z, pad_dim):
+    def conv(z, pad_dim, interior_first=False):
         pads = [(0, 0), (0, 0)]
         pads[dim - 1] = pad_dim
         pads[2 - dim] = other_pads
         strides = [0, 0]
         strides[dim - 1] = s
         strides[2 - dim] = stride_other
-        return _conv_nhwc(z, w, tuple(strides), tuple(pads), backend)
+        return _conv_nhwc(z, w, tuple(strides), tuple(pads), backend,
+                          interior_first)
 
     if lo == 0 and hi == 0:
         return conv(x, (0, 0))
 
-    halo_lo, halo_hi = halo_lib.halo_slices(
-        x, dim, lo, hi, axis_name, axis_size)
+    # issue the halo transfers up front (§IV-A): every compute op below is
+    # built AFTER the ppermutes, so the transfers head the dataflow graph.
+    sched = halo_lib.HaloSchedule(x, dim, lo, hi, axis_name, axis_size)
+    halo_lo, halo_hi = sched.lo, sched.hi
 
     if not overlap:
         parts = [p for p in (halo_lo, x, halo_hi) if p is not None]
         return conv(lax.concatenate(parts, dimension=dim), (0, 0))
 
-    # --- interior/boundary split (paper §IV-A) ---
+    # --- interior/boundary latency-hiding schedule (paper §IV-A) ---
     t_lo = cdiv(lo, s)                       # output rows needing the lo halo
     i_hi = cdiv(hl + lo - k + 1, s)          # first output row needing hi halo
     t_hi = ho - i_hi
     if t_lo + t_hi >= ho:                    # shard too small to split
+        # no XLA-level split possible; when the halo rides along H the
+        # Pallas kernel can still run its own interior-first block order.
         parts = [p for p in (halo_lo, x, halo_hi) if p is not None]
-        return conv(lax.concatenate(parts, dimension=dim), (0, 0))
+        return conv(lax.concatenate(parts, dimension=dim), (0, 0),
+                    interior_first=(dim == 1))
+
+    # interior first: rows [t_lo, i_hi) read input [t_lo*s - lo,
+    # (i_hi-1)s - lo + k) — no halo dependence, so this conv runs while the
+    # transfers are in flight.  pin() then barriers the halos behind the
+    # interior result, so the boundary convs cannot be hoisted above it
+    # (nor the transfers sunk below it) by the compiler.
+    inner_in = lax.slice_in_dim(
+        x, t_lo * s - lo, (i_hi - 1) * s - lo + k, axis=dim)
+    interior = conv(inner_in, (0, 0))
+    interior, halo_lo, halo_hi = sched.pin(interior)
 
     blocks = []
     if t_lo > 0:
@@ -182,10 +202,7 @@ def _split_dim_conv(x, w, *, dim, s, k, lo, hi, axis_name, axis_size,
             [halo_lo, lax.slice_in_dim(x, 0, (t_lo - 1) * s - lo + k, axis=dim)],
             dimension=dim)
         blocks.append(conv(top_in, (0, 0)))
-    # interior: rows [t_lo, i_hi) read input [t_lo*s - lo, (i_hi-1)s - lo + k)
-    inner_in = lax.slice_in_dim(
-        x, t_lo * s - lo, (i_hi - 1) * s - lo + k, axis=dim)
-    blocks.append(conv(inner_in, (0, 0)))
+    blocks.append(interior)
     if t_hi > 0:
         bot_in = lax.slice_in_dim(x, i_hi * s - lo, hl, axis=dim)
         bot_in = lax.concatenate([bot_in, halo_hi], dimension=dim)

@@ -17,6 +17,12 @@ for every layer:
 Channel/filter parallelism — sketched-only in the paper (§III-D) — is a
 selectable candidate here (beyond-paper), so the optimizer can discover it
 for many-filter/small-spatial layers.
+
+Every edge cost flows through perfmodel.layer_cost, so the §IV-A overlap
+credit the solver optimizes against is η-scaled: a machine whose calibrated
+``overlap_eta`` < 1 credits halo/CF hiding only to the degree the A/B
+microbenchmark measured it, which can flip the optimum away from
+communication-heavy distributions that only pay under perfect overlap.
 """
 from __future__ import annotations
 

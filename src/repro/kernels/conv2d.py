@@ -41,12 +41,19 @@ def _kernel(x_ref, w_ref, y_ref, *, kh, kw, stride, block_h, w_out):
 
 
 def conv2d(x, w, *, stride: int = 1, block_h: int = 8, block_f: int = 128,
-           interpret: bool = False):
+           interpret: bool = False, interior_first: bool = False):
     """VALID conv, NHWC x HWIO -> NHWC (same dtype as x).
 
     Halo/padding is the caller's job (core.spatial_conv supplies the halo
     rows), mirroring the paper's split between communication and the local
     cuDNN call.
+
+    interior_first: visit the interior row blocks before the two boundary
+    blocks — the §IV-A interior/boundary schedule inside the kernel.  The
+    boundary blocks are the only ones whose input rows include the halo,
+    so an in-flight halo transfer gets the whole interior pass to land
+    before its rows are read.  Pure grid reorder: every block is computed
+    exactly once, numerics unchanged.
     """
     n, h, wd, c = x.shape
     kh, kw, _, f = w.shape
@@ -67,6 +74,13 @@ def conv2d(x, w, *, stride: int = 1, block_h: int = 8, block_f: int = 128,
                              b * block_h * stride + in_rows, axis=1)
         for b in range(nh)], axis=1)
 
+    if interior_first and nh > 2:
+        # grid step -> row block: interior blocks first, boundaries last.
+        order = jnp.asarray(tuple(range(1, nh - 1)) + (0, nh - 1), jnp.int32)
+        hmap = lambda hi: order[hi]                  # noqa: E731
+    else:
+        hmap = lambda hi: hi                         # noqa: E731
+
     kern = functools.partial(_kernel, kh=kh, kw=kw, stride=stride,
                              block_h=block_h, w_out=w_out)
     return pl.pallas_call(
@@ -74,12 +88,12 @@ def conv2d(x, w, *, stride: int = 1, block_h: int = 8, block_f: int = 128,
         grid=(n, nh, f // block_f),
         in_specs=[
             pl.BlockSpec((1, 1, in_rows, wd, c),
-                         lambda ni, hi, fi: (ni, hi, 0, 0, 0)),
+                         lambda ni, hi, fi: (ni, hmap(hi), 0, 0, 0)),
             pl.BlockSpec((kh, kw, c, block_f),
                          lambda ni, hi, fi: (0, 0, 0, fi)),
         ],
         out_specs=pl.BlockSpec((1, block_h, w_out, block_f),
-                               lambda ni, hi, fi: (ni, hi, 0, fi)),
+                               lambda ni, hi, fi: (ni, hmap(hi), 0, fi)),
         out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, f), x.dtype),
         interpret=interpret,
     )(xb, w)

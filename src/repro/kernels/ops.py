@@ -27,13 +27,17 @@ def _mode():
     return os.environ.get("REPRO_KERNELS", "ref")
 
 
-@functools.partial(jax.jit, static_argnames=("stride",))
-def conv2d(x, w, stride: int = 1):
+@functools.partial(jax.jit, static_argnames=("stride", "interior_first"))
+def conv2d(x, w, stride: int = 1, interior_first: bool = False):
+    # interior_first: the kernel-level §IV-A schedule (boundary row blocks
+    # visited last) — a pure reorder the reference path can ignore.
     m = _mode()
     if m == "pallas":
-        return _conv.conv2d(x, w, stride=stride)
+        return _conv.conv2d(x, w, stride=stride,
+                            interior_first=interior_first)
     if m == "interpret":
-        return _conv.conv2d(x, w, stride=stride, interpret=True)
+        return _conv.conv2d(x, w, stride=stride, interpret=True,
+                            interior_first=interior_first)
     return _ref.conv2d_ref(x, w, stride=stride)
 
 

@@ -248,3 +248,78 @@ def test_machine_json_roundtrip():
     m = dataclasses.replace(TPU_V5E, name="x", eff_halfwork=1.5e9)
     m2 = pm.Machine(**json.loads(json.dumps(dataclasses.asdict(m))))
     assert m2 == m
+
+
+# --------------------------------------------------------------- eta fit --
+def test_eta_fit_defaults_without_live_mesh():
+    """fit_eta on a plain mesh-shape dict (no live devices) measures
+    nothing and keeps the base machine's η — which is how every fake-timer
+    calibration in this file stays deterministic — while calibrate() still
+    records the (empty) fit in meta for provenance."""
+    eta, samples = cal.fit_eta(MS22, timer=fake_timer)
+    assert eta == cal.HOST_BASE.overlap_eta == 1.0
+    assert samples == []
+    c = cal.calibrate(SPECS, MS22, timer=fake_timer)
+    assert c.meta["eta_fit"] == {"eta": 1.0, "samples": []}
+    assert c.machine.overlap_eta == 1.0
+
+
+def test_eta_roundtrips_through_json(tmp_path):
+    """A non-default η survives save/load bit-exactly (Machine JSON)."""
+    c = cal.calibrate(SPECS, MS22, timer=fake_timer)
+    c.machine = dataclasses.replace(c.machine, overlap_eta=0.37)
+    c.meta["eta_fit"] = {"eta": 0.37, "samples": [
+        {"axis": "model", "p": 2, "t_overlap": 1e-3, "t_serial": 1.5e-3,
+         "t_compute": 1e-3, "eta": 0.37}]}
+    path = str(tmp_path / "c.json")
+    c.save(path)
+    c2 = cal.Calibration.load(path)
+    assert c2.machine.overlap_eta == 0.37
+    assert c2.meta["eta_fit"] == c.meta["eta_fit"]
+    assert c2.machine == c.machine
+
+
+def test_eta_backfill_on_pre_eta_file(tmp_path, capsys):
+    """A calibration file written before the η fit existed (no meta
+    eta_fit, Machine JSON without the field) is backfilled on load and
+    persisted — and a fresh file is never re-measured (load_or_run's
+    idempotence contract extends to the η fit)."""
+    path = str(tmp_path / "c.json")
+    c = cal.load_or_run(path, SPECS, MS22, timer=fake_timer)
+    with open(path) as f:
+        obj = json.load(f)
+    del obj["meta"]["eta_fit"]
+    del obj["machine"]["overlap_eta"]
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    capsys.readouterr()
+    c2 = cal.load_or_run(path, SPECS, MS22, timer=fake_timer)
+    assert "backfilled overlap eta" in capsys.readouterr().out
+    assert c2.meta["eta_fit"] == {"eta": 1.0, "samples": []}
+    assert c2.machine.overlap_eta == 1.0
+    assert c2.to_json() == c.to_json()      # backfill restored the file
+
+    def boom(fn, *a):
+        raise AssertionError("re-measured instead of loading")
+    c3 = cal.load_or_run(path, SPECS, MS22, timer=boom)
+    assert c3.to_json() == c2.to_json()
+
+
+def test_measured_eta_drives_chunk_default():
+    """channel_conv's chunked-CF default resolves from the installed
+    measurement: off with no measurement, on at η >= the threshold — and
+    a fake-timer calibration (no live mesh, no samples) installs nothing."""
+    from repro.core import channel_conv as cc
+    before = cc.measured_eta()
+    try:
+        cc.set_measured_eta(None)
+        assert cc.default_channel_chunks() == 1
+        assert cc.chunks_decision()[1] == "eta unmeasured"
+        cal.calibrate(SPECS, MS22, timer=fake_timer)
+        assert cc.measured_eta() is None    # empty fit installs nothing
+        cc.set_measured_eta(cc.ETA_CHUNK_THRESHOLD)
+        assert cc.default_channel_chunks() == 2
+        cc.set_measured_eta(0.1)
+        assert cc.default_channel_chunks() == 1
+    finally:
+        cc.set_measured_eta(before)

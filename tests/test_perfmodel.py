@@ -72,9 +72,12 @@ def test_product_axis_halo_hop_pricing():
 
 
 def test_cf_overlap_credit_matches_runtime_semantics():
-    """The model's CF forward term credits overlap (fp = max(compute, RS))
-    — justified now that channel_conv's overlapped channel mode pipelines
-    the psum_scatter with per-channel-block compute (§IV-A analogue)."""
+    """The model's CF forward term credits overlap η-scaled:
+    fp = compute + RS - η·min(RS, compute).  At the analytic machines'
+    η=1 default that is exactly max(compute, RS) — justified now that
+    channel_conv's overlapped channel mode pipelines the psum_scatter
+    with per-channel-block compute (§IV-A analogue) — while a calibrated
+    η < 1 keeps the unhidden share of the collective on the bill."""
     layer = pm.ConvLayer("cf", n=4, c=32, h=8, w=8, f=32, k=3, s=1)
     ms = {"data": 2, "model": 2}
     cf = Dist("cf", {"N": ("data",), "C": ("model",), "F": ("model",)})
@@ -82,8 +85,23 @@ def test_cf_overlap_credit_matches_runtime_semantics():
     no = pm.layer_cost(M, layer, cf, ms, overlap=False)
     rs = no.fp - no.fp_compute
     assert rs > 0, "CF layer must pay a forward reduce-scatter"
+    assert M.overlap_eta == 1.0       # analytic machines stay at full credit
     assert ov.fp == max(ov.fp_compute, rs)
+    assert ov.fp_saved == pytest.approx(min(rs, ov.fp_compute))
     assert ov.total <= no.total
+    # η = 0.5: exactly half of the hideable min is credited, and the saved
+    # seconds are surfaced per layer via LayerCost.overlap_credit
+    M5 = dataclasses.replace(M, overlap_eta=0.5)
+    half = pm.layer_cost(M5, layer, cf, ms, overlap=True)
+    assert half.fp == pytest.approx(
+        half.fp_compute + rs - 0.5 * min(rs, half.fp_compute))
+    assert half.fp_saved == pytest.approx(0.5 * min(rs, half.fp_compute))
+    assert no.fp_saved == no.bp_saved == 0.0 and no.overlap_credit == 0.0
+    assert ov.fp < half.fp < no.fp
+    # η = 0 degenerates to the serialized bill even with overlap=True
+    z = pm.layer_cost(dataclasses.replace(M, overlap_eta=0.0), layer, cf,
+                      ms, overlap=True)
+    assert z.fp == no.fp and z.overlap_credit == 0.0
 
 
 def test_cf_collective_words_at_submesh_sizes():

@@ -374,6 +374,15 @@ def test_plan_multiaxis_distributed():
     run_dist_group("multiaxis")
 
 
+def test_plan_overlap_distributed():
+    """4-device §IV-A latency-hiding schedule: interior/boundary split
+    parity (fwd + grads) vs the serialized path and the oracle on the XLA
+    and Pallas-interpret backends, plus the optimization_barrier pin
+    surviving jit lowering (dist_checks group 'overlap'; fast — run by
+    the CI fast lane like 'cf')."""
+    run_dist_group("overlap")
+
+
 def test_plan_memfit_distributed():
     """4-device memory-aware planning acceptance (paper §VI Table 2): a
     synthetic per-device capacity limit rules uniform sample-parallel out;
