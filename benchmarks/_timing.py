@@ -2,36 +2,9 @@
 block_until_ready on every rep, trimmed-mean reduction.
 
 Every benchmark in this directory times through this module so no script
-grows its own ad-hoc loop again; the single-callable loop lives in
-`repro.utils.time_fn` so src-side code (the calibrator, core.calibrate)
-shares it without depending on `benchmarks`.
+grows its own ad-hoc loop again; the implementations live in `repro.utils`
+so src-side code (the calibrator core.calibrate, the segmented profiler
+core.trace) shares them without depending on `benchmarks`.
 """
-import time
-
-import jax
-
-from repro.utils import time_fn, trimmed_mean  # noqa: F401
-
-
-def interleaved_min(fns, reps: int = 5, rounds: int = 4):
-    """Comparative wall-clock for competing callables: {tag: seconds/call}.
-
-    Candidates are timed in alternating rounds (A, B, A, B, ...) so
-    machine-load drift during the run hits every candidate equally —
-    timing each in one contiguous block makes their ratio track whatever
-    else the host was doing rather than the candidates (observed 40%
-    swings between *identical* programs).  The per-tag estimate is the
-    minimum over per-round means: the noise-floor round is the one where
-    the host interfered least, and it is the comparable number across
-    candidates.  Callables must already be compiled/warmed (call each once
-    first) and take no arguments.
-    """
-    samples = {tag: [] for tag in fns}
-    for _ in range(rounds):
-        for tag, fn in fns.items():
-            t0 = time.perf_counter()
-            for _ in range(max(reps, 1)):
-                out = fn()
-            jax.tree.leaves(out)[0].block_until_ready()
-            samples[tag].append((time.perf_counter() - t0) / max(reps, 1))
-    return {tag: min(ts) for tag, ts in samples.items()}
+from repro.utils import (interleaved_min, interleaved_samples,  # noqa: F401
+                         percentile, time_fn, trimmed_mean)

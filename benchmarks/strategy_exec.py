@@ -4,7 +4,7 @@ against the §V perf model — the validation loop the paper closes with
 
   PYTHONPATH=src python -m benchmarks.strategy_exec [ndevices] \
       [--out BENCH_strategy.json] [--calibration BENCH_calibration.json] \
-      [--gate] [--gate-tol 0.10] [--reps N]
+      [--gate] [--gate-tol 0.10] [--reps N] [--attribute]
 
 Runs on `ndevices` host CPU devices (default 4, set before jax import).
 First the §V cost inputs are calibrated on the live backend
@@ -40,6 +40,16 @@ uploads it and later runs reuse it), then three workloads execute:
     calibration picks the measured winner of its own A/B.  The measured
     achieved-overlap η is emitted alongside the calibrated one.
 
+With --attribute the mesh16cf and mesh16_proxy auto plans additionally run
+the segmented per-layer profiler (core.trace.trace_plan) and the
+predicted-vs-measured join (plan.attribution_report): the workloads' known
+single-digit model/measured end-to-end gap is decomposed into named
+per-term drift ({fp,bp}_compute/{fp,bp}_comm/bpa/shuffle), written to
+BENCH_attribution.json with the worst-drifting term named per workload.
+Per-term drift beyond 5x prints an `# ATTRIBUTION WARNING` without
+failing the exit code (the drift is a model-fidelity signal, not an
+ordering-promise violation).
+
 Output is both the legacy `name,us_per_call,derived` CSV rows and a
 machine-readable BENCH_strategy.json: per-workload measured/predicted step
 times AND peak memory (model-predicted vs XLA memory_analysis measured, so
@@ -73,7 +83,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from benchmarks._timing import interleaved_min  # noqa: E402
+from benchmarks._timing import interleaved_samples, percentile  # noqa: E402
 
 SCHEMA = "repro/bench_strategy@1"
 
@@ -96,7 +106,9 @@ def _measure_plans(cfg, batch, specs, plans, mesh, reps, rounds=4):
     be a (tag, plan) pair or a (tag, plan, overlap) triple — the overlap
     flag (default True) threads to meshnet.loss_fn, which is how the
     `overlap` workload force-serializes one arm of its A/B.  Returns
-    ({tag: seconds}, {tag: measured peak bytes})."""
+    ({tag: seconds}, {tag: measured peak bytes}, {tag: per-round means})
+    — the point estimate is min-over-round-means as always; the raw round
+    samples ride along so callers can report the p50/p95 spread."""
     import functools
     from repro.core.calibrate import compiled_peak_bytes
     from repro.data.pipeline import synthetic_mesh_batch
@@ -125,7 +137,8 @@ def _measure_plans(cfg, batch, specs, plans, mesh, reps, rounds=4):
             peaks[tag] = compiled_peak_bytes(compiled)
             compiled(params, bb)[0].block_until_ready()    # warm
             steps[tag] = functools.partial(compiled, params, bb)
-        return interleaved_min(steps, reps=reps, rounds=rounds), peaks
+        samples = interleaved_samples(steps, reps=reps, rounds=rounds)
+        return {t: min(s) for t, s in samples.items()}, peaks, samples
 
 
 def _solver_agreement(plan_lib, machine, table, specs, mesh, **kw):
@@ -147,17 +160,20 @@ def _solver_agreement(plan_lib, machine, table, specs, mesh, **kw):
 
 def _bench_workload(name, cfg, batch, specs, plans, mesh, reps, rounds,
                     baseline_tag, auto_tag, agreement):
-    measured, peaks = _measure_plans(cfg, batch, specs, plans, mesh, reps,
-                                     rounds)
+    measured, peaks, samples = _measure_plans(cfg, batch, specs, plans,
+                                              mesh, reps, rounds)
     entries = {}
     for entry in plans:
         tag, plan = entry[0], entry[1]
         dt = measured[tag]
+        p50 = percentile(samples[tag], 50)
+        p95 = percentile(samples[tag], 95)
         pred = plan.predicted["total"] if plan.predicted else float("nan")
         pmem = plan.predicted["memory"]["peak_bytes"] \
             if plan.predicted and "memory" in plan.predicted else float("nan")
         mmem = peaks[tag]
         entries[tag] = {"measured_s": dt, "predicted_s": pred,
+                        "measured_p50_s": p50, "measured_p95_s": p95,
                         "model_measured_ratio": pred / dt,
                         "predicted_peak_bytes": pmem,
                         "measured_peak_bytes": mmem,
@@ -165,6 +181,7 @@ def _bench_workload(name, cfg, batch, specs, plans, mesh, reps, rounds,
                             pmem / mmem if mmem else float("nan"),
                         "n_reshards": plan.n_reshards}
         print(f"strategy_exec/{name}/{tag},{dt*1e6:.1f},"
+              f"p50_us={p50*1e6:.1f} p95_us={p95*1e6:.1f} "
               f"predicted_us={pred*1e6:.1f} "
               f"model_measured_ratio={pred/dt:.3f} "
               f"predicted_peak_bytes={pmem:.0f} "
@@ -175,6 +192,50 @@ def _bench_workload(name, cfg, batch, specs, plans, mesh, reps, rounds,
     return {"baseline": baseline_tag, "auto": auto_tag, "entries": entries,
             "auto_vs_uniform_measured": ratio,
             "solver_agreement": agreement}
+
+
+def _attribute(targets, mesh, out_path, reps, rounds) -> bool:
+    """--attribute: decompose each target's model-vs-measured gap into
+    named per-term drift.  Runs the segmented per-layer profiler
+    (core.trace.trace_plan) on the solved plan and joins it against the
+    perf-model prediction (plan.attribution_report); the JSON written to
+    `out_path` names the worst-drifting cost term per workload.  Returns
+    whether any term drifted beyond 5x (warn-only — printed, not gated)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.trace import format_attribution, trace_plan
+    from repro.data.pipeline import synthetic_mesh_batch
+    from repro.models.cnn import meshnet
+    report = {"schema": "repro/bench_attribution@1",
+              "backend": jax.default_backend(),
+              "mesh": dict(mesh.shape), "workloads": {}}
+    warned = False
+    for name, (cfg, batch, specs, plan) in targets.items():
+        params = meshnet.init(jax.random.PRNGKey(0), cfg)
+        b = {k: jnp.asarray(v) for k, v in synthetic_mesh_batch(
+            0, batch, cfg.input_hw, cfg.in_channels,
+            out_hw=cfg.out_hw).items()}
+        first = specs[0]
+        spec = plan.input_spec(first.name, first.h, first.w, first.k,
+                               first.s, mesh)
+        lbl = P("data") if batch % dict(mesh.shape)["data"] == 0 else P(None)
+        bb = {"image": jax.device_put(b["image"], NamedSharding(mesh, spec)),
+              "label": jax.device_put(b["label"], NamedSharding(mesh, lbl))}
+        trace = trace_plan(plan, params, bb, cfg=cfg, mesh=mesh,
+                           reps=reps, rounds=rounds)
+        rep = plan.attribution_report(trace)
+        print(f"# attribution/{name} (worst term: {rep['worst_term']}):")
+        print(format_attribution(rep))
+        report["workloads"][name] = {"trace": trace.to_dict(),
+                                     "attribution": rep}
+        for term, t in rep["terms"].items():
+            if t["drift"] > 5.0 or t["drift"] < 0.2:
+                warned = True
+                print(f"# ATTRIBUTION WARNING: {name} term {term} drifts "
+                      f"{t['drift']:.2f}x from the model (warn-only)")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"# wrote {out_path}")
+    return warned
 
 
 def run(args) -> int:
@@ -233,6 +294,7 @@ def run(args) -> int:
     machine, table = cal.machine, cal.table
 
     workloads = {}
+    attr_targets = {}     # --attribute: {workload: (cfg, batch, specs, plan)}
 
     # --- mesh128: the strategy choice is non-trivial on this mesh --------
     # (batch 2 < device count: pure sample parallelism invalid)
@@ -315,6 +377,7 @@ def run(args) -> int:
                                           allow_channel_filter=False))),
         mesh, args.reps, args.rounds, "uniform", "auto_cf", agree)
     workloads["mesh16cf"]["n_cf_layers"] = n_cf
+    attr_targets["mesh16cf"] = (cfg16, 2, specs16, auto_cf)
 
     # --- mesh2k_proxy: the 2K model's depth (5 convs/block) at reduced
     # resolution, under the 2-D H x W decomposition (W on the data axis,
@@ -357,6 +420,7 @@ def run(args) -> int:
             mesh, args.reps, args.rounds, "uniform", "auto", agree)
         workloads["mesh16_proxy"]["n_cf_spatial_layers"] = n_cfsp
         workloads["mesh16_proxy"]["n_product_axis_layers"] = n_multi
+        attr_targets["mesh16_proxy"] = (cfg16p, 1, specs16p, auto)
 
     # --- mesh2k_unreachable: the paper's Table-2 memory story as an
     # executable benchmark.  Batch 1: sample parallelism cannot reduce
@@ -434,6 +498,9 @@ def run(args) -> int:
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1, sort_keys=True)
     print(f"# wrote {args.out}")
+    if args.attribute:
+        _attribute(attr_targets, mesh, args.attribution_out,
+                   args.reps, args.rounds)
     for name, wl in workloads.items():
         print(f"# {name}: auto/uniform measured "
               f"{wl['auto_vs_uniform_measured']:.3f}, solver agreement "
@@ -468,6 +535,13 @@ def main(argv=None) -> int:
     ap.add_argument("--gate-tol", type=float, default=0.10,
                     help="noise tolerance for the gate: fail only when "
                          "auto > (1+tol) * uniform measured")
+    ap.add_argument("--attribute", action="store_true",
+                    help="segmented per-layer profiling of the mesh16cf/"
+                         "mesh16_proxy auto plans (core.trace.trace_plan): "
+                         "decompose the model-vs-measured gap into named "
+                         "per-term drift and write --attribution-out; "
+                         "drift beyond 5x warns without failing")
+    ap.add_argument("--attribution-out", default="BENCH_attribution.json")
     return run(ap.parse_args(argv))
 
 

@@ -9,6 +9,8 @@ minute on CPU devices.
 3. Compile the solved strategy into an executable NetworkPlan (per-layer
    shardings + §III-C reshard points, core.plan) and train a few steps
    WITH that plan; checkpoint and resume.
+4. Trace the plan: segmented per-layer profiling (core.trace) joined
+   against the model's predictions (plan.attribution_report).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -135,4 +137,25 @@ for i in range(10):
 ck.save(10, (params, state))
 (params, state), manifest = ck.restore((params, state))
 print(f"checkpoint round-trip ok (step {manifest['step']})")
+
+# --- trace the plan: measured per-layer cost vs the model's prediction ---
+# core.trace re-executes each layer in isolation (AOT-compiled fwd and
+# fwd+bwd, interleaved-min timing) and the attribution report joins the
+# measured seconds against the plan's predicted LayerCost terms — the
+# per-term drift line names which §V cost term the model gets most wrong.
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.trace import trace_plan, format_attribution
+b = {k: jnp.asarray(v) for k, v in
+     synthetic_mesh_batch(0, BATCH, 64, 4, out_hw=8).items()}
+first = layers[0]
+spec = plan.input_spec(first.name, first.h, first.w, first.k, first.s, mesh)
+batch = {"image": jax.device_put(b["image"], NamedSharding(mesh, spec)),
+         "label": jax.device_put(b["label"], NamedSharding(mesh, P("data")))}
+trace = trace_plan(plan, params, batch, cfg=cfg, mesh=mesh,
+                   reps=2, rounds=2)
+print(f"\ntraced {len(trace.layers)} layers "
+      f"(per-layer sum {trace.layer_sum_s * 1e3:.2f} ms, "
+      f"fused step {trace.step['fwd_bwd_s'] * 1e3:.2f} ms):")
+print(format_attribution(plan.attribution_report(trace)))
+# trace.save("step_trace.json"); trace.save_chrome("step_trace.chrome.json")
 print("done.")

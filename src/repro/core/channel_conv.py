@@ -68,6 +68,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import halo as halo_lib
+from repro.core import trace as trace_lib
 from repro.core.spatial_conv import (ConvSharding, _conv_nhwc, _local_conv,
                                      cast_to_weight_dtype, fit_spatial_axis,
                                      spatial_conv2d)
@@ -249,7 +250,8 @@ def _local_cf_conv(x, w, *, strides, sharding: CFSharding, mesh_shape,
         # column-parallel: restore full C, convolve my F-block (with its
         # halo when spatial axes compose in).  y needs no collective; the
         # all-gather's VJP is the reduce-scatter completing dL/dx.
-        xg = lax.all_gather(x, ax, axis=3, tiled=True)
+        with trace_lib.annotate("cf_all_gather"):
+            xg = lax.all_gather(x, ax, axis=3, tiled=True)
         wp = _slice_block(w, ax, p, dim=3)
         return _conv_local_block(xg, wp, strides=strides, sharding=sharding,
                                  mesh_shape=mesh_shape, overlap=overlap,
@@ -270,7 +272,9 @@ def _local_cf_conv(x, w, *, strides, sharding: CFSharding, mesh_shape,
                                     sharding=sharding,
                                     mesh_shape=mesh_shape, overlap=overlap,
                                     backend=backend)
-        return lax.psum_scatter(partial, ax, scatter_dimension=3, tiled=True)
+        with trace_lib.annotate("cf_reduce_scatter"):
+            return lax.psum_scatter(partial, ax, scatter_dimension=3,
+                                    tiled=True)
 
     # overlapped channel mode (§IV-A analogue): convolve per channel block
     # and reduce-scatter each partial as it completes, so the collective of
@@ -287,7 +291,9 @@ def _local_cf_conv(x, w, *, strides, sharding: CFSharding, mesh_shape,
             lax.slice_in_dim(wp, lo, hi, axis=2),
             strides=strides, sharding=sharding, mesh_shape=mesh_shape,
             overlap=overlap, backend=backend)
-        scat = lax.psum_scatter(partial, ax, scatter_dimension=3, tiled=True)
+        with trace_lib.annotate("cf_reduce_scatter"):
+            scat = lax.psum_scatter(partial, ax, scatter_dimension=3,
+                                    tiled=True)
         y = scat if y is None else y + scat
     return y
 
@@ -417,8 +423,9 @@ def cf_batch_norm(x, gamma, beta, *, sharding: CFSharding, mesh=None,
         ss = jnp.sum(jnp.square(xf), (0, 1, 2))
         n = x.shape[0] * x.shape[1] * x.shape[2]
         if comm_axes:
-            s = lax.psum(s, comm_axes)
-            ss = lax.psum(ss, comm_axes)
+            with trace_lib.annotate("bn_collective"):
+                s = lax.psum(s, comm_axes)
+                ss = lax.psum(ss, comm_axes)
             for a in comm_axes:
                 n *= mesh_shape[a]
         mean = s / n

@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import trace as trace_lib
+
 
 def _fwd_perm(n: int):  # shard i -> i+1  (send my tail downward)
     return [(i, i + 1) for i in range(n - 1)]
@@ -71,12 +73,14 @@ def halo_slices(x, dim: int, lo: int, hi: int, axis_name, axis_size: int):
     product axis of total size `axis_size` (see module docstring).
     """
     halo_lo = halo_hi = None
-    if lo > 0:
-        tail = lax.slice_in_dim(x, x.shape[dim] - lo, x.shape[dim], axis=dim)
-        halo_lo = lax.ppermute(tail, axis_name, _fwd_perm(axis_size))
-    if hi > 0:
-        head = lax.slice_in_dim(x, 0, hi, axis=dim)
-        halo_hi = lax.ppermute(head, axis_name, _bwd_perm(axis_size))
+    with trace_lib.annotate("halo_exchange"):
+        if lo > 0:
+            tail = lax.slice_in_dim(x, x.shape[dim] - lo, x.shape[dim],
+                                    axis=dim)
+            halo_lo = lax.ppermute(tail, axis_name, _fwd_perm(axis_size))
+        if hi > 0:
+            head = lax.slice_in_dim(x, 0, hi, axis=dim)
+            halo_hi = lax.ppermute(head, axis_name, _bwd_perm(axis_size))
     return halo_lo, halo_hi
 
 

@@ -47,12 +47,13 @@ import jax
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import trace as trace_lib
 from repro.core.channel_conv import CFSharding, chunks_decision
 from repro.core.distribution import Dist
 from repro.core.halo import pinned as halo_pinned
 from repro.core.perfmodel import (ConvLayer, EmpiricalTable, Machine,
                                   cf_mode_for, layer_memory, network_cost,
-                                  network_memory)
+                                  network_memory, shuffle_time)
 from repro.core.spatial_conv import ConvSharding
 from repro.core.strategy import (CapacityError, candidate_dists, solve_dag,
                                  solve_line)
@@ -280,14 +281,15 @@ class NetworkPlan:
         lp = self.layers.get(name)
         if lp is None or not lp.reshard_in or mesh is None:
             return x
-        y = lax.with_sharding_constraint(
-            x, NamedSharding(mesh, lp.sharding.x_spec()))
-        # double-buffer the reshard point: the barrier keeps the
-        # redistributed tensor a distinct buffer instead of letting XLA
-        # fuse the collective into the consuming layer's first op — the
-        # shuffle of layer l can then run while layer l-1's tail compute
-        # is still in flight (§IV-A applied between layers, not within).
-        (y,) = halo_pinned((y,))
+        with trace_lib.annotate("reshard"):
+            y = lax.with_sharding_constraint(
+                x, NamedSharding(mesh, lp.sharding.x_spec()))
+            # double-buffer the reshard point: the barrier keeps the
+            # redistributed tensor a distinct buffer instead of letting XLA
+            # fuse the collective into the consuming layer's first op — the
+            # shuffle of layer l can then run while layer l-1's tail compute
+            # is still in flight (§IV-A applied between layers, not within).
+            (y,) = halo_pinned((y,))
         return y
 
     # -- reporting ----------------------------------------------------------
@@ -337,6 +339,105 @@ class NetworkPlan:
                     f"{mem['peak_layer']!r}"
                     + (f" (limit {human_bytes(lim)})" if lim else ""))
         return "\n".join(head + rows)
+
+    def attribution_report(self, trace, *, tol: float = 5.0) -> dict:
+        """Join a measured StepTrace (core.trace) against this plan's
+        perf-model predictions, per layer and per cost term.
+
+        Per layer: predicted fwd (layer_cost fp + the incoming shuffle) and
+        bwd (bpx + bpw + bpa) seconds next to the trace's measured isolated
+        fwd/bwd, with ratio = measured / predicted; layers whose ratio
+        exceeds `tol` in either direction are flagged.
+
+        Per term: the model's cost decomposition {fp_compute, fp_comm,
+        bp_compute, bp_comm, bpa, shuffle} each gets a drift estimate — the
+        predicted-seconds-weighted mean of the per-layer measured/predicted
+        ratio in that term's direction (fwd or bwd).  The measurement only
+        resolves whole fwd/bwd segments, so a term's drift is the layer
+        ratio weighted by how much of the prediction that term carries:
+        terms that dominate the predicted time in layers that drift most
+        are named as `worst_term` — the §V model-vs-measured mystery
+        decomposed into named per-term suspects.
+
+        Requires a plan compiled with a `machine` (predicted cost report).
+        """
+        if not self.predicted or "layer_costs" not in self.predicted:
+            raise PlanError("attribution needs a plan compiled with a "
+                            "`machine` (no predicted layer costs attached)")
+        costs = self.predicted["layer_costs"]
+        shuf = self.predicted.get("shuffle_per_layer", {})
+        missing = [n for n in costs if n not in trace.layers]
+        if missing:
+            raise PlanError(f"trace has no measurement for plan layers "
+                            f"{missing} (knows {list(trace.layers)[:8]}...)")
+
+        per_layer: dict[str, dict] = {}
+        flagged: list[str] = []
+        for name, c in costs.items():
+            # float() everywhere: perf-model terms may be numpy scalars,
+            # and the report must stay json.dump-able as-is
+            pf = float(c.fp + shuf.get(name, 0.0))
+            pb = float(c.bpx + c.bpw + c.bpa)
+            mf = float(trace.layers[name]["fwd_s"])
+            mb = float(trace.layers[name]["bwd_s"])
+            ratio = (mf + mb) / (pf + pb) if pf + pb > 0 else float("nan")
+            flag = bool(ratio == ratio
+                        and (ratio > tol or ratio < 1.0 / tol))
+            if flag:
+                flagged.append(name)
+            per_layer[name] = {
+                "predicted_fwd_s": pf, "measured_fwd_s": mf,
+                "predicted_bwd_s": pb, "measured_bwd_s": mb,
+                "ratio_total": ratio, "flagged": flag}
+
+        # per-term drift: terms split by the direction they live in
+        def terms_of(name):
+            c = costs[name]
+            return {"fp_compute": (float(c.fp_compute), "f"),
+                    "fp_comm": (float(c.fp - c.fp_compute + c.fp_saved),
+                                "f"),
+                    "shuffle": (float(shuf.get(name, 0.0)), "f"),
+                    "bp_compute": (float(c.bp_compute), "b"),
+                    "bp_comm": (float(c.bpx + c.bpw - c.bp_compute
+                                      + c.bp_saved), "b"),
+                    "bpa": (float(c.bpa), "b")}
+
+        acc: dict[str, list[float]] = {}
+        for name in costs:
+            r = per_layer[name]
+            dir_ratio = {
+                "f": (r["measured_fwd_s"] / r["predicted_fwd_s"]
+                      if r["predicted_fwd_s"] > 0 else None),
+                "b": (r["measured_bwd_s"] / r["predicted_bwd_s"]
+                      if r["predicted_bwd_s"] > 0 else None)}
+            for term, (w, d) in terms_of(name).items():
+                if w > 0 and dir_ratio[d] is not None:
+                    s = acc.setdefault(term, [0.0, 0.0])
+                    s[0] += w * dir_ratio[d]
+                    s[1] += w
+        terms = {t: {"drift": s[0] / s[1], "predicted_s": s[1]}
+                 for t, s in acc.items() if s[1] > 0}
+        worst = None
+        if terms:
+            import math
+            worst = max(terms, key=lambda t: abs(math.log(
+                max(terms[t]["drift"], 1e-12))))
+
+        pred_total = sum(r["predicted_fwd_s"] + r["predicted_bwd_s"]
+                         for r in per_layer.values())
+        meas_total = sum(r["measured_fwd_s"] + r["measured_bwd_s"]
+                         for r in per_layer.values())
+        return {"schema": "repro/attribution@1",
+                "tolerance": tol,
+                "per_layer": per_layer,
+                "flagged": flagged,
+                "terms": terms,
+                "worst_term": worst,
+                "totals": {"predicted_s": pred_total,
+                           "measured_s": meas_total,
+                           "ratio": (meas_total / pred_total
+                                     if pred_total > 0 else float("nan")),
+                           "step_measured_s": trace.step["fwd_bwd_s"]}}
 
 
 # ---------------------------------------------------------------------------
@@ -476,6 +577,17 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
         predicted["overlap_credit"] = {
             l.name: c.overlap_credit
             for l, c in zip(cs, predicted["per_layer"])}
+        # name-keyed views of the per-layer cost terms — what
+        # attribution_report joins against a measured StepTrace.  The
+        # shuffle of transition i -> i+1 is charged to the *receiving*
+        # layer (where NetworkPlan.reshard executes it).
+        predicted["layer_costs"] = {
+            l.name: c for l, c in zip(cs, predicted["per_layer"])}
+        predicted["shuffle_per_layer"] = {cs[0].name: 0.0} if cs else {}
+        for i in range(len(cs) - 1):
+            predicted["shuffle_per_layer"][cs[i + 1].name] = shuffle_time(
+                machine, cs[i], final[cs[i].name], final[cs[i + 1].name],
+                mesh_shape)
         # memory rolls up over ALL compiled layers — a side branch's
         # weights and stashes are resident too, so branchy networks must
         # not escape the capacity validation just because the TIME report

@@ -40,6 +40,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import halo as halo_lib
+from repro.core import trace as trace_lib
 from repro.utils import cdiv, same_pads, shard_map
 
 DIMNUMS = ("NHWC", "HWIO", "NHWC")
@@ -172,7 +173,8 @@ def _split_dim_conv(x, w, *, dim, s, k, lo, hi, axis_name, axis_size,
 
     if not overlap:
         parts = [p for p in (halo_lo, x, halo_hi) if p is not None]
-        return conv(lax.concatenate(parts, dimension=dim), (0, 0))
+        with trace_lib.annotate("conv_serialized"):
+            return conv(lax.concatenate(parts, dimension=dim), (0, 0))
 
     # --- interior/boundary latency-hiding schedule (paper §IV-A) ---
     t_lo = cdiv(lo, s)                       # output rows needing the lo halo
@@ -182,8 +184,9 @@ def _split_dim_conv(x, w, *, dim, s, k, lo, hi, axis_name, axis_size,
         # no XLA-level split possible; when the halo rides along H the
         # Pallas kernel can still run its own interior-first block order.
         parts = [p for p in (halo_lo, x, halo_hi) if p is not None]
-        return conv(lax.concatenate(parts, dimension=dim), (0, 0),
-                    interior_first=(dim == 1))
+        with trace_lib.annotate("conv_serialized"):
+            return conv(lax.concatenate(parts, dimension=dim), (0, 0),
+                        interior_first=(dim == 1))
 
     # interior first: rows [t_lo, i_hi) read input [t_lo*s - lo,
     # (i_hi-1)s - lo + k) — no halo dependence, so this conv runs while the
@@ -192,22 +195,27 @@ def _split_dim_conv(x, w, *, dim, s, k, lo, hi, axis_name, axis_size,
     # (nor the transfers sunk below it) by the compiler.
     inner_in = lax.slice_in_dim(
         x, t_lo * s - lo, (i_hi - 1) * s - lo + k, axis=dim)
-    interior = conv(inner_in, (0, 0))
+    with trace_lib.annotate("conv_interior"):
+        interior = conv(inner_in, (0, 0))
     interior, halo_lo, halo_hi = sched.pin(interior)
 
     blocks = []
-    if t_lo > 0:
-        # top boundary: rows [0, t_lo) read input [-lo, (t_lo-1)s - lo + k)
-        top_in = lax.concatenate(
-            [halo_lo, lax.slice_in_dim(x, 0, (t_lo - 1) * s - lo + k, axis=dim)],
-            dimension=dim)
-        blocks.append(conv(top_in, (0, 0)))
-    blocks.append(interior)
-    if t_hi > 0:
-        bot_in = lax.slice_in_dim(x, i_hi * s - lo, hl, axis=dim)
-        bot_in = lax.concatenate([bot_in, halo_hi], dimension=dim)
-        blocks.append(conv(bot_in, (0, 0)))
-    return lax.concatenate(blocks, dimension=dim) if len(blocks) > 1 else blocks[0]
+    with trace_lib.annotate("conv_boundary"):
+        if t_lo > 0:
+            # top boundary: rows [0, t_lo) read input
+            # [-lo, (t_lo-1)s - lo + k)
+            top_in = lax.concatenate(
+                [halo_lo,
+                 lax.slice_in_dim(x, 0, (t_lo - 1) * s - lo + k, axis=dim)],
+                dimension=dim)
+            blocks.append(conv(top_in, (0, 0)))
+        blocks.append(interior)
+        if t_hi > 0:
+            bot_in = lax.slice_in_dim(x, i_hi * s - lo, hl, axis=dim)
+            bot_in = lax.concatenate([bot_in, halo_hi], dimension=dim)
+            blocks.append(conv(bot_in, (0, 0)))
+    return lax.concatenate(blocks, dimension=dim) if len(blocks) > 1 \
+        else blocks[0]
 
 
 def _local_conv(x, w, *, strides, sharding: ConvSharding, mesh_shape,

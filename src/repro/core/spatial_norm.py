@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core import trace as trace_lib
 from repro.core.spatial_conv import ConvSharding
 from repro.utils import shard_map
 
@@ -66,8 +67,9 @@ def batch_norm(x, gamma, beta, *, sharding: ConvSharding, mesh=None,
 
     def fn(x):
         s, ss, n = _stats(x.astype(jnp.float32), reduce_axes)
-        s = lax.psum(s, comm_axes)
-        ss = lax.psum(ss, comm_axes)
+        with trace_lib.annotate("bn_collective"):
+            s = lax.psum(s, comm_axes)
+            ss = lax.psum(ss, comm_axes)
         n = n * functools.reduce(
             lambda a, b: a * b, (dict(mesh.shape)[ax] for ax in comm_axes), 1)
         mean = s / n

@@ -36,6 +36,7 @@ from repro.launch import shardings as SH
 from repro.launch.mesh import make_mesh, batch_axes
 from repro.optim.optimizer import adamw, sgd, warmup_cosine
 from repro.runtime.fault_tolerance import ResilientLoop, StragglerMonitor
+from repro.train.metrics import MetricsLogger, debug_nan_check
 from repro.train.train_loop import TrainStepConfig, make_train_step
 from repro.utils import BF16, FP32, human_count, tree_num_params
 
@@ -124,15 +125,18 @@ def build_cnn_plan(args, arch, cfg, mesh, ba):
 def build(args, mesh):
     arch = registry.canon(args.arch)
     ba = batch_axes(mesh)
+    extras = {"arch": arch, "plan": None, "specs": None, "layer_names": None}
     if arch in registry.CNN_ARCHS:
         cfg = registry.get(arch, smoke=args.smoke)
         plan, specs = build_cnn_plan(args, arch, cfg, mesh, ba)
+        extras.update(plan=plan, specs=specs)
         if arch == "resnet50":
             from repro.models.cnn import resnet as M
             mk = lambda s: pipeline.synthetic_imagenet_batch(
                 s, args.batch, cfg.input_hw, cfg.n_classes)
         else:
             from repro.models.cnn import meshnet as M
+            extras["layer_names"] = M.layer_names(cfg)
             mk = lambda s: pipeline.synthetic_mesh_batch(
                 s, args.batch, cfg.input_hw, cfg.in_channels,
                 out_hw=cfg.out_hw)
@@ -177,7 +181,7 @@ def build(args, mesh):
     params = jax.tree.map(
         lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
         params, pspecs)
-    return cfg, params, opt, loss, mk, put, prec
+    return cfg, params, opt, loss, mk, put, prec, extras
 
 
 def main():
@@ -235,12 +239,34 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics", nargs="?", const="METRICS.jsonl",
+                    default=None, metavar="PATH",
+                    help="write structured JSONL step records (loss, "
+                         "step time, samples/s) to PATH (default "
+                         "METRICS.jsonl) next to the terminal echo")
+    ap.add_argument("--profile", nargs="?", const="BENCH_step_trace.json",
+                    default=None, metavar="PATH",
+                    help="profile instead of train: measure every plan "
+                         "layer's isolated fwd/bwd cost (core.trace."
+                         "trace_plan), print the predicted-vs-measured "
+                         "attribution table, write the StepTrace JSON to "
+                         "PATH (default BENCH_step_trace.json) plus a "
+                         "Chrome-trace timeline next to it, then exit — "
+                         "meshnet archs (mesh1k/mesh2k) only")
+    ap.add_argument("--debug-nans", action="store_true",
+                    help="check loss/grad_norm for NaN/inf every step and "
+                         "fail fast naming the first offending layer "
+                         "(train.metrics.debug_nan_check)")
     args = ap.parse_args()
 
     mesh = make_mesh(data=args.data, model=args.model, pod=args.pod)
-    cfg, params, opt, loss, mk, put, prec = build(args, mesh)
+    cfg, params, opt, loss, mk, put, prec, extras = build(args, mesh)
     print(f"arch={cfg.name} params={human_count(tree_num_params(params))} "
           f"mesh={dict(mesh.shape)}")
+
+    if args.profile:
+        profile(args, cfg, params, mk, put, mesh, extras)
+        return
 
     tstep = make_train_step(
         lambda p, b: loss(p, b), opt, mesh,
@@ -259,6 +285,10 @@ def main():
     mon = StragglerMonitor()
     t0 = time.time()
     losses = []
+    mlog = MetricsLogger(args.metrics)
+    mlog.log_run(arch=cfg.name, n_params=tree_num_params(params),
+                 mesh=dict(mesh.shape), batch=args.batch, steps=args.steps,
+                 strategy=args.strategy, start_step=start)
 
     def make_step():
         def run(state, step):
@@ -266,10 +296,14 @@ def main():
             b = put(next(pf))
             p, o, ef, m = tstep(p, o, ef, b)
             losses.append(float(m["loss"]))
-            if step % args.log_every == 0:
-                dt = time.time() - t0
-                print(f"step {step:5d} loss {losses[-1]:.4f} "
-                      f"({dt/(len(losses) or 1):.3f}s/step)")
+            if args.debug_nans:
+                host = {k: float(v) for k, v in m.items()
+                        if k in ("loss", "grad_norm")}
+                debug_nan_check(step, host, p, extras["layer_names"])
+            dt = (time.time() - t0) / (len(losses) or 1)
+            mlog.log_step(step, losses[-1], step_time_s=dt,
+                          samples_per_s=args.batch / dt if dt else None,
+                          echo=step % args.log_every == 0)
             return (p, o, ef), m
         return run
 
@@ -279,8 +313,44 @@ def main():
     ck.save(step, state, extra={"step": step})
     ck.wait()
     pf.close()
+    mlog.log_done(step, loss=losses[-1], straggler=mon.stats)
+    mlog.close()
     print(f"done at step {step}; final loss {losses[-1]:.4f}; "
           f"straggler stats {mon.stats}")
+
+
+def profile(args, cfg, params, mk, put, mesh, extras):
+    """--profile: segmented per-layer cost measurement instead of training.
+
+    Runs core.trace.trace_plan on the built plan, prints the
+    predicted-vs-measured attribution table (when the plan carries a
+    perf-model report, i.e. --strategy auto), and writes the StepTrace
+    JSON (attribution embedded in meta) plus a Chrome-trace timeline."""
+    from repro.core.trace import format_attribution, trace_plan
+    if extras["layer_names"] is None:
+        raise SystemExit("--profile covers the meshnet archs "
+                         "(mesh1k/mesh2k) — the segmented profiler walks "
+                         "meshnet.layer_fns")
+    plan = extras["plan"]
+    batch = put(mk(0))
+    t0 = time.time()
+    trace = trace_plan(plan, params, batch, cfg=cfg, mesh=mesh,
+                       reps=2, rounds=2)
+    print(f"profiled {len(trace.layers)} layers in {time.time() - t0:.1f}s "
+          f"(step fwd+bwd {trace.step['fwd_bwd_s']*1e3:.3f} ms, "
+          f"layer sum {trace.layer_sum_s*1e3:.3f} ms)")
+    if plan.predicted and "layer_costs" in plan.predicted:
+        report = plan.attribution_report(trace)
+        trace.meta["attribution"] = report
+        print(format_attribution(report))
+    else:
+        print("no perf-model prediction on this plan (use --strategy auto "
+              "for the predicted-vs-measured attribution)")
+    trace.save(args.profile)
+    chrome = args.profile[:-5] if args.profile.endswith(".json") \
+        else args.profile
+    trace.save_chrome(chrome + ".chrome.json")
+    print(f"wrote {args.profile} and {chrome}.chrome.json")
 
 
 if __name__ == "__main__":

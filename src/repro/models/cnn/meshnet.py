@@ -73,36 +73,62 @@ def layer_names(cfg: MeshNetConfig) -> list[str]:
             for i in range(cfg.convs_per_block)] + ["pred"]
 
 
-def apply(params, x, cfg: MeshNetConfig, plan=None, mesh=None, overlap=True):
-    """x: (N, H, W, 18) -> per-pixel logits (N, H/64, W/64, n_classes).
+def layer_fns(cfg: MeshNetConfig, plan=None, mesh=None, overlap=True):
+    """Execution-order ``(name, fn)`` pairs with ``fn(layer_params, x) -> y``.
 
-    `plan`: a core.plan.NetworkPlan, a single legacy ConvSharding (uniform),
-    or a legacy per-layer ConvSharding list aligned with `layer_names`.
+    Each fn runs one layer end to end under ``trace.layer_context(name)``:
+    the §III-C reshard into the layer's distribution, the conv (stride-2 at
+    each block head), and — for body layers — BN + ReLU.  ``apply`` is the
+    composition of these fns, so whole-network execution and the segmented
+    profiler (core.trace.trace_plan, which compiles and times each fn in
+    isolation) share one definition of "a layer".
     """
+    from repro.core import trace as trace_lib
     from repro.core.plan import NetworkPlan
     names = layer_names(cfg)
     if isinstance(plan, (list, tuple)):
         plan = NetworkPlan.from_shardings(names, plan)
     else:
         plan = NetworkPlan.of(plan)
+
+    def body_fn(name, stride):
+        def fn(lp, x):
+            with trace_lib.layer_context(name):
+                sh = plan.sharding(name)
+                x = plan.reshard(x, name, mesh)
+                x = L.conv_apply(lp["conv"], x, stride=stride,
+                                 sharding=sh, mesh=mesh, overlap=overlap)
+                shb = sh.fit(x.shape[1], x.shape[2], 1, 1, mesh)
+                x = L.bn_apply(lp["bn"], x, sharding=shb, mesh=mesh,
+                               scope=cfg.bn_scope)
+                return L.relu(x)
+        return fn
+
+    def pred_fn(lp, x):
+        with trace_lib.layer_context("pred"):
+            x = plan.reshard(x, "pred", mesh)
+            return L.conv_apply(lp["conv"], x, stride=1,
+                                sharding=plan.sharding("pred"), mesh=mesh,
+                                overlap=overlap)
+
+    fns = []
     li = 0
     for b in range(len(cfg.widths)):
         for i in range(cfg.convs_per_block):
-            name = names[li]
-            sh = plan.sharding(name)
-            stride = 2 if i == 0 else 1
-            x = plan.reshard(x, name, mesh)
-            x = L.conv_apply(params[li]["conv"], x, stride=stride,
-                             sharding=sh, mesh=mesh, overlap=overlap)
-            shb = sh.fit(x.shape[1], x.shape[2], 1, 1, mesh)
-            x = L.bn_apply(params[li]["bn"], x, sharding=shb, mesh=mesh,
-                           scope=cfg.bn_scope)
-            x = L.relu(x)
+            fns.append((names[li], body_fn(names[li], 2 if i == 0 else 1)))
             li += 1
-    x = plan.reshard(x, "pred", mesh)
-    x = L.conv_apply(params[li]["conv"], x, stride=1,
-                     sharding=plan.sharding("pred"), mesh=mesh,
-                     overlap=overlap)
+    fns.append(("pred", pred_fn))
+    return fns
+
+
+def apply(params, x, cfg: MeshNetConfig, plan=None, mesh=None, overlap=True):
+    """x: (N, H, W, 18) -> per-pixel logits (N, H/64, W/64, n_classes).
+
+    `plan`: a core.plan.NetworkPlan, a single legacy ConvSharding (uniform),
+    or a legacy per-layer ConvSharding list aligned with `layer_names`.
+    """
+    for (_, fn), lp in zip(layer_fns(cfg, plan, mesh, overlap), params):
+        x = fn(lp, x)
     return x
 
 

@@ -103,10 +103,14 @@ def trimmed_mean(xs: Sequence[float], trim: float = 0.2) -> float:
 
 
 def time_fn(fn, *args, reps: int = 5, warmup: int = 1,
-            trim: float = 0.2) -> float:
+            trim: float = 0.2, return_samples: bool = False):
     """Wall-clock seconds per call of a jax callable (the shared benchmark
     timing loop: warmup calls absorb compilation, every timed rep blocks on
     the result, and the per-rep samples are trimmed-mean reduced).
+
+    With `return_samples=True` returns ``(estimate, samples)`` — the raw
+    per-rep seconds alongside the trimmed mean, so callers can report the
+    measurement spread (p50/p95) instead of a bare point estimate.
 
     `benchmarks/_timing.py` re-exports this for the benchmark scripts; the
     calibrator (core.calibrate) injects it as its default timer.
@@ -121,7 +125,59 @@ def time_fn(fn, *args, reps: int = 5, warmup: int = 1,
         out = fn(*args)
         jax.tree.leaves(out)[0].block_until_ready()
         samples.append(_time.perf_counter() - t0)
-    return trimmed_mean(samples, trim)
+    est = trimmed_mean(samples, trim)
+    return (est, samples) if return_samples else est
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile of `xs` (q in [0, 100]) — the spread
+    statistic the benchmark columns report next to their point estimate."""
+    xs = sorted(xs)
+    if not xs:
+        return float("nan")
+    pos = (len(xs) - 1) * q / 100.0
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
+
+
+def interleaved_samples(fns, reps: int = 5, rounds: int = 4):
+    """Per-round mean seconds/call for competing callables:
+    {tag: [round means]}.
+
+    Candidates are timed in alternating rounds (A, B, A, B, ...) so
+    machine-load drift during the run hits every candidate equally —
+    timing each in one contiguous block makes their ratio track whatever
+    else the host was doing rather than the candidates (observed 40%
+    swings between *identical* programs).  Callables must already be
+    compiled/warmed (call each once first) and take no arguments.
+
+    `interleaved_min` reduces this to the comparable point estimate;
+    callers wanting the spread (p50/p95 over rounds) use the samples.
+    """
+    import time as _time
+    samples = {tag: [] for tag in fns}
+    for _ in range(rounds):
+        for tag, fn in fns.items():
+            t0 = _time.perf_counter()
+            for _ in range(max(reps, 1)):
+                out = fn()
+            jax.tree.leaves(out)[0].block_until_ready()
+            samples[tag].append((_time.perf_counter() - t0) / max(reps, 1))
+    return samples
+
+
+def interleaved_min(fns, reps: int = 5, rounds: int = 4):
+    """Comparative wall-clock for competing callables: {tag: seconds/call}.
+
+    The per-tag estimate is the minimum over per-round means
+    (interleaved_samples): the noise-floor round is the one where the host
+    interfered least, and it is the comparable number across candidates.
+    Shared by benchmarks/_timing (the benchmark scripts) and
+    core.trace.trace_plan (the segmented re-execution profiler).
+    """
+    return {tag: min(ts)
+            for tag, ts in interleaved_samples(fns, reps, rounds).items()}
 
 
 def assert_no_nans(tree: Any, where: str = "") -> None:

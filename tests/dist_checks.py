@@ -3,7 +3,7 @@ process keeps a single CPU device (the 512-device env is dry-run-only).
 
 Usage:  python tests/dist_checks.py <group>
 Groups: conv | attention | ssm | models | train | compress | plan | cf |
-        spatial2d | multiaxis | memfit | overlap
+        spatial2d | multiaxis | memfit | overlap | trace
 Exits 0 on success; any assertion failure exits non-zero.
 """
 import os
@@ -920,6 +920,72 @@ def check_overlap():
           "opt-barrier pinned through jit")
 
 
+def check_trace():
+    """Plan-aware tracing (core.trace) on a 4-device solved plan: the
+    segmented re-execution profiler attributes every plan layer with a
+    positive measured fwd+bwd cost, the isolated per-layer sums land
+    within dispatch-overhead tolerance of the whole fused step, the
+    attribution join (plan.attribution_report) covers every layer and
+    names a worst-drifting cost term, and the layer/region annotations
+    survive into the *compiled* HLO op_name metadata (named_scope names
+    are absent from the StableHLO lowering on this jax — the compiled
+    module is where profiles become decodable)."""
+    from repro.core import plan as plan_lib
+    from repro.core.perfmodel import TPU_V5E
+    from repro.core.trace import StepTrace, trace_plan
+    from repro.data.pipeline import synthetic_mesh_batch
+    from repro.models.cnn import meshnet
+
+    mesh = make_mesh(data=2, model=2)
+    cfg = meshnet.MeshNetConfig("t", input_hw=32, in_channels=4,
+                                convs_per_block=1, widths=(8, 16, 16),
+                                bn_scope="global")
+    specs = meshnet.layer_specs(cfg, 2)
+    plan = plan_lib.plan_line(TPU_V5E, specs, mesh)
+    params = meshnet.init(jax.random.PRNGKey(0), cfg)
+    b = {k: jnp.asarray(v) for k, v in
+         synthetic_mesh_batch(0, 2, 32, 4, out_hw=4).items()}
+    first = specs[0]
+    spec = plan.input_spec(first.name, first.h, first.w, first.k,
+                           first.s, mesh)
+    b["image"] = jax.device_put(b["image"], NamedSharding(mesh, spec))
+    b["label"] = jax.device_put(b["label"], NamedSharding(mesh, P("data")))
+    trace = trace_plan(plan, params, b, cfg=cfg, mesh=mesh,
+                       reps=2, rounds=2)
+
+    names = meshnet.layer_names(cfg)
+    assert list(trace.layers) == names, list(trace.layers)
+    for name, r in trace.layers.items():
+        assert r["fwd_s"] > 0, (name, r)
+        assert r["fwd_bwd_s"] >= r["fwd_s"] * 0.5, (name, r)
+        assert r["bwd_s"] >= 0, (name, r)
+    # segmentation-overhead bound: the isolated sums track the fused step
+    # (isolated layers lose cross-layer fusion and pay extra dispatch, so
+    # the bound is loose — catching 100x pathologies, not noise)
+    ratio = trace.layer_sum_s / trace.step["fwd_bwd_s"]
+    assert 0.1 <= ratio <= 10.0, (ratio, trace.layers, trace.step)
+    assert trace.meta["measured_peak_bytes"] > 0
+    assert StepTrace.from_dict(trace.to_dict()).to_dict() == trace.to_dict()
+
+    # the attribution join covers every plan layer and names a worst term
+    rep = plan.attribution_report(trace)
+    assert set(rep["per_layer"]) == set(names), rep["per_layer"].keys()
+    assert rep["worst_term"] in rep["terms"], rep
+    assert rep["totals"]["measured_s"] > 0
+
+    # annotations land in the COMPILED HLO metadata (op_name)
+    with mesh:
+        txt = jax.jit(lambda p, bb: meshnet.loss_fn(
+            p, bb, cfg, plan, mesh)).lower(params, b).compile().as_text()
+    for needle in names:
+        assert needle in txt, f"layer scope {needle!r} not in compiled HLO"
+    assert ("conv_interior" in txt or "conv_serialized" in txt
+            or "cf_all_gather" in txt or "cf_reduce_scatter" in txt), \
+        "no conv region annotation in compiled HLO"
+    print(f"trace: {len(names)} layers attributed, layer_sum/step "
+          f"{ratio:.2f}, worst term {rep['worst_term']}")
+
+
 def check_compress():
     from repro.optim.grad_compress import cross_pod_mean
     mesh = make_mesh(data=2, model=2, pod=2)
@@ -956,7 +1022,7 @@ GROUPS = {"conv": check_conv, "attention": check_attention,
           "compress": check_compress, "plan": check_plan,
           "cf": check_cf, "spatial2d": check_spatial2d,
           "multiaxis": check_multiaxis, "memfit": check_memfit,
-          "overlap": check_overlap}
+          "overlap": check_overlap, "trace": check_trace}
 
 if __name__ == "__main__":
     GROUPS[sys.argv[1]]()
