@@ -40,6 +40,12 @@ uploads it and later runs reuse it), then three workloads execute:
     calibration picks the measured winner of its own A/B.  The measured
     achieved-overlap η is emitted alongside the calibrated one.
 
+A `ckpt_overhead` lane rides along (top-level report key): the same
+compiled step runs bare vs with an async CheckpointManager.save enqueued
+per call, and the gate fails when the save stalls the step beyond
+--ckpt-tol — asynchronous checkpointing must stay off the critical path
+(the fault-tolerance lever the elastic runtime depends on).
+
 With --attribute the mesh16cf and mesh16_proxy auto plans additionally run
 the segmented per-layer profiler (core.trace.trace_plan) and the
 predicted-vs-measured join (plan.attribution_report): the workloads' known
@@ -194,6 +200,59 @@ def _bench_workload(name, cfg, batch, specs, plans, mesh, reps, rounds,
             "solver_agreement": agreement}
 
 
+def _bench_ckpt_overhead(cfg, batch, specs, plan, mesh, reps, rounds, tol):
+    """Async checkpointing must stay off the step critical path.  The same
+    compiled train-ish step runs in two interleaved arms: bare, and with a
+    CheckpointManager.save enqueued per call (host copy synchronous, npz
+    write on the daemon thread).  The measured ratio gates the CI bench
+    lane: an async save that stalls the step beyond `tol` is the classic
+    checkpoint-stall regression the async path exists to prevent."""
+    import functools
+    import itertools
+    import shutil
+    import tempfile
+    from repro.checkpoint.checkpoint import CheckpointManager
+    from repro.data.pipeline import synthetic_mesh_batch
+    from repro.models.cnn import meshnet
+    params = meshnet.init(jax.random.PRNGKey(0), cfg)
+    b = {k: jnp.asarray(v) for k, v in synthetic_mesh_batch(
+        0, batch, cfg.input_hw, cfg.in_channels,
+        out_hw=cfg.out_hw).items()}
+    first = specs[0]
+    lbl_spec = P("data") if batch % dict(mesh.shape)["data"] == 0 else P(None)
+    ckdir = tempfile.mkdtemp()
+    try:
+        with mesh:
+            spec = plan.input_spec(first.name, first.h, first.w, first.k,
+                                   first.s, mesh)
+            bb = {"image": jax.device_put(b["image"],
+                                          NamedSharding(mesh, spec)),
+                  "label": jax.device_put(b["label"],
+                                          NamedSharding(mesh, lbl_spec))}
+            step = jax.jit(jax.value_and_grad(
+                lambda p, x: meshnet.loss_fn(p, x, cfg, plan, mesh)))
+            compiled = step.lower(params, bb).compile()
+            compiled(params, bb)[0].block_until_ready()        # warm
+            ck = CheckpointManager(ckdir, keep=2, async_save=True)
+            counter = itertools.count()
+
+            def with_save():
+                out = compiled(params, bb)
+                ck.save(next(counter), params, extra={"step": 0})
+                return out
+            samples = interleaved_samples(
+                {"no_ckpt": functools.partial(compiled, params, bb),
+                 "async_ckpt": with_save}, reps=reps, rounds=rounds)
+            ck.wait()
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+    no = min(samples["no_ckpt"])
+    asy = min(samples["async_ckpt"])
+    return {"no_ckpt_s": no, "async_ckpt_s": asy,
+            "overhead_ratio": asy / no, "tolerance": tol,
+            "ok": asy / no <= 1 + tol}
+
+
 def _attribute(targets, mesh, out_path, reps, rounds) -> bool:
     """--attribute: decompose each target's model-vs-measured gap into
     named per-term drift.  Runs the segmented per-layer profiler
@@ -300,11 +359,11 @@ def run(args) -> int:
     # (batch 2 < device count: pure sample parallelism invalid)
     names = meshnet.layer_names(cfg128)
     auto, agree = _solver_agreement(plan_lib, machine, table, specs128, mesh)
+    uni128 = _uniform_plan(plan_lib, uni_sh, names, specs128, mesh,
+                           machine, table)
     workloads["mesh128"] = _bench_workload(
         "mesh128", cfg128, 2, specs128,
-        (("uniform", _uniform_plan(plan_lib, uni_sh, names, specs128, mesh,
-                                   machine, table)),
-         ("auto", auto)),
+        (("uniform", uni128), ("auto", auto)),
         mesh, args.reps, args.rounds, "uniform", "auto", agree)
 
     # --- overlap: the §IV-A latency-hiding A/B on the SAME plan ----------
@@ -468,6 +527,18 @@ def run(args) -> int:
                   f"{rep_peak:.0f}B (DOES NOT FIT), "
                   f"auto {auto_peak:.0f}B (fits)")
 
+    # --- ckpt_overhead: async save must stay off the critical path -------
+    # (top-level report key, NOT a workload: the ordering gate below
+    # iterates workloads and this lane has its own tolerance)
+    ckpt_overhead = _bench_ckpt_overhead(cfg128, 2, specs128, uni128, mesh,
+                                         args.reps, args.rounds,
+                                         args.ckpt_tol)
+    print(f"# ckpt_overhead: no_ckpt "
+          f"{ckpt_overhead['no_ckpt_s']*1e6:.1f}us, async_ckpt "
+          f"{ckpt_overhead['async_ckpt_s']*1e6:.1f}us, ratio "
+          f"{ckpt_overhead['overhead_ratio']:.3f} "
+          f"(tol {1 + args.ckpt_tol:.2f}x)")
+
     # --- the gate: the optimizer's ordering promise ----------------------
     tol = args.gate_tol
     # the ordering promise applies where the baseline was a *feasible*
@@ -481,6 +552,12 @@ def run(args) -> int:
         for name, wl in workloads.items()
         if "mem" not in wl and wl["auto_vs_uniform_measured"] > 1 + tol]
     failures += mem_failures          # capacity promises gate too
+    if not ckpt_overhead["ok"]:
+        failures.append(
+            f"ckpt_overhead: async save slows the step "
+            f"{ckpt_overhead['overhead_ratio']:.2f}x "
+            f"(> {1 + args.ckpt_tol:.2f}x) — checkpoint stall on the "
+            f"critical path")
     report = {
         "schema": SCHEMA,
         "backend": jax.default_backend(),
@@ -492,6 +569,7 @@ def run(args) -> int:
                         "machine": dataclasses.asdict(machine),
                         "table_entries": len(table)},
         "workloads": workloads,
+        "ckpt_overhead": ckpt_overhead,
         "gate": {"enabled": bool(args.gate), "tolerance": tol,
                  "ok": not failures, "failures": failures},
     }
@@ -535,6 +613,11 @@ def main(argv=None) -> int:
     ap.add_argument("--gate-tol", type=float, default=0.10,
                     help="noise tolerance for the gate: fail only when "
                          "auto > (1+tol) * uniform measured")
+    ap.add_argument("--ckpt-tol", type=float, default=0.5,
+                    help="tolerance for the checkpoint-overhead lane: fail "
+                         "when the async-save arm is slower than the bare "
+                         "step beyond (1+tol)x — the save must overlap, "
+                         "not stall")
     ap.add_argument("--attribute", action="store_true",
                     help="segmented per-layer profiling of the mesh16cf/"
                          "mesh16_proxy auto plans (core.trace.trace_plan): "

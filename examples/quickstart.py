@@ -138,6 +138,40 @@ ck.save(10, (params, state))
 (params, state), manifest = ck.restore((params, state))
 print(f"checkpoint round-trip ok (step {manifest['step']})")
 
+# --- elastic fault tolerance: kill the run mid-step, watch it recover ----
+# The resilient loop (runtime/fault_tolerance.py) checkpoints every N
+# steps — manifests carry the solved plan spec (repro/ckpt@1), so a
+# restart on a DIFFERENT mesh can reshard-on-restore — and on a fault
+# rolls back to the last checkpoint and replays the same step-indexed
+# batches, so the recovered trajectory is the uninterrupted one.
+# chaos.raise_at_step simulates the crash; the train driver's --elastic
+# flag adds the full story (device loss -> remesh onto survivors ->
+# re-solve under the same --mem-limit), see README "Elastic &
+# fault-tolerant training".
+from repro.runtime import chaos
+from repro.runtime.fault_tolerance import ResilientLoop, StragglerMonitor
+
+
+def make_step():
+    def run(st, i):
+        b = {k: jnp.asarray(v) for k, v in
+             synthetic_mesh_batch(i, BATCH, 64, 4, out_hw=8).items()}
+        p, s, l = step(st[0], st[1], b)
+        return (p, s), {"loss": float(l)}
+    return run
+
+
+ck2 = CheckpointManager(tempfile.mkdtemp(), async_save=False)
+loop = ResilientLoop(ckpt=ck2, make_step=make_step, ckpt_every=3,
+                     plan_spec=lambda: plan.to_spec(dict(mesh.shape)))
+(params, state), end, m = loop.run((params, state), 0, 8,
+                                   monitor=StragglerMonitor(),
+                                   inject_failure=chaos.raise_at_step(5))
+rec = ck2.read_manifest()["plan"]
+print(f"faulted at step 5, rolled back to the step-3 checkpoint, replayed "
+      f"to step {end} (loss {m['loss']:.4f}); manifest records the plan "
+      f"solved on mesh {rec['mesh']}")
+
 # --- trace the plan: measured per-layer cost vs the model's prediction ---
 # core.trace re-executes each layer in isolation (AOT-compiled fwd and
 # fwd+bwd, interleaved-min timing) and the attribution report joins the

@@ -1,14 +1,22 @@
 """Distributed, mesh-independent checkpointing with async save and
 atomic-rename commit — the fault-tolerance substrate.
 
-Format: one directory per step, containing
+Format (schema ``repro/ckpt@1``): one directory per step, containing
 
-  manifest.json    pytree structure, global shapes/dtypes, step, config hash
+  manifest.json    schema tag, pytree structure, global shapes/dtypes,
+                   step, caller extras, and — when the run was planned —
+                   the solved NetworkPlan spec (per-layer dists, mesh
+                   shape, mem_limit, config hash, calibration fingerprint;
+                   see core.plan.NetworkPlan.to_spec)
   arrays.npz       the leaves as *global* numpy arrays
 
 Saving global arrays (rather than per-shard files) makes checkpoints
 **mesh-independent**: a run may restart on a different (pod, data, model)
-factorization — elastic scaling — and each device simply re-reads its shard.
+factorization — elastic scaling.  `restore()` *reshards on restore*: each
+global array is device_put under the sharding of the caller's template
+leaf, so loading onto a new mesh IS the §III-C redistribution — the caller
+lowers the recorded plan spec (or a freshly re-solved plan) onto the new
+mesh (core.plan.plan_from_spec / plan_line) to build that template.
 On a real multi-host cluster the npz write is replaced by a per-host
 shard writer behind the same API (only process 0 writes here, which is
 exact for a single-host CPU test rig).
@@ -17,7 +25,11 @@ Fault-tolerance contract used by repro.runtime / launch.train:
   * saves go to `<dir>/tmp-<step>` then os.replace -> `<dir>/step-<step>`
     (atomic on POSIX), so a crash mid-save never corrupts the latest good
     checkpoint;
-  * `latest_step` scans only committed directories;
+  * `latest_step` scans only committed `step-<int>` directories — names
+    that merely start with "step-" (editor droppings, a torn rename) are
+    ignored rather than crashing the scan;
+  * leftover `tmp-*` directories from a crash mid-save are swept at
+    manager construction and on every gc pass;
   * async mode copies to host memory synchronously (cheap) and writes on a
     daemon thread, overlapping I/O with the next training steps — the
     classic checkpoint-stall mitigation;
@@ -28,12 +40,27 @@ from __future__ import annotations
 import json
 import os
 import queue
+import re
+import shutil
 import threading
 import time
 from typing import Any
 
 import jax
 import numpy as np
+
+SCHEMA = "repro/ckpt@1"
+
+_STEP_RE = re.compile(r"^step-(\d+)$")
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint cannot be restored into the caller's state template.
+
+    Messages carry the manifest-derived diagnosis (leaf counts, global
+    shapes, the recorded plan's mesh) instead of a bare assert, so an
+    elastic restart can tell "wrong architecture" from "stale directory".
+    """
 
 
 def _flatten(tree: Any):
@@ -47,6 +74,7 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         os.makedirs(directory, exist_ok=True)
+        self.sweep_tmp()
         self._q: queue.Queue = queue.Queue()
         self._worker = None
         self._error: list[BaseException] = []
@@ -55,15 +83,22 @@ class CheckpointManager:
             self._worker.start()
 
     # ---------------- public API ----------------
-    def save(self, step: int, tree: Any, extra: dict | None = None):
+    def save(self, step: int, tree: Any, extra: dict | None = None,
+             plan: dict | None = None):
+        """Checkpoint `tree` at `step`.  `plan` (optional) is the solved
+        NetworkPlan spec dict (core.plan.NetworkPlan.to_spec) recorded in
+        the manifest, so a restart — possibly on a different mesh — can
+        recover the distribution strategy the run was executing."""
         leaves, treedef = _flatten(tree)
         host = [np.asarray(x) for x in leaves]     # device->host, sync
         manifest = {
+            "schema": SCHEMA,
             "step": int(step),
             "treedef": str(treedef),
             "shapes": [list(a.shape) for a in host],
             "dtypes": [str(a.dtype) for a in host],
             "extra": extra or {},
+            "plan": plan,
             "time": time.time(),
         }
         if self.async_save:
@@ -73,33 +108,77 @@ class CheckpointManager:
             self._write(int(step), host, manifest)
 
     def restore(self, tree_like: Any, step: int | None = None):
-        """Restore into the structure (and shardings) of `tree_like`."""
+        """Restore into the structure (and shardings) of `tree_like`.
+
+        Reshard-on-restore: arrays are stored *global*, so each leaf is
+        simply device_put under the template leaf's sharding — whatever
+        mesh factorization that template was built on.  Moving a run from
+        a (2,2) to a (1,3) mesh is therefore the caller building the
+        template under a plan lowered/re-solved on the new mesh
+        (core.plan.plan_from_spec with this manifest's "plan" record) and
+        restoring into it; no per-shard file layout pins the old mesh.
+        """
         step = self.latest_step() if step is None else step
         if step is None:
             return None, None
+        manifest = self.read_manifest(step)
         path = os.path.join(self.dir, f"step-{step}")
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
         data = np.load(os.path.join(path, "arrays.npz"))
         leaves, treedef = _flatten(tree_like)
-        assert len(leaves) == len(manifest["shapes"]), \
-            "checkpoint/model structure mismatch"
+        plan = manifest.get("plan") or {}
+        hint = (f" (checkpoint recorded plan on mesh {plan.get('mesh')})"
+                if plan.get("mesh") else "")
+        if len(leaves) != len(manifest["shapes"]):
+            raise CheckpointError(
+                f"step-{step} holds {len(manifest['shapes'])} leaves but "
+                f"the restore template has {len(leaves)} — different model/"
+                f"optimizer structure, not a mesh change{hint}")
         out = []
         for i, ref in enumerate(leaves):
             arr = data[f"a{i}"]
-            assert tuple(arr.shape) == tuple(ref.shape), \
-                f"leaf {i}: ckpt {arr.shape} vs model {ref.shape}"
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise CheckpointError(
+                    f"step-{step} leaf {i}: global shape {tuple(arr.shape)} "
+                    f"vs template {tuple(ref.shape)} — checkpoints store "
+                    f"GLOBAL arrays, so a mesh change alone cannot cause "
+                    f"this; the architecture differs{hint}")
             if hasattr(ref, "sharding") and ref.sharding is not None:
+                # reshard-on-restore: the global array lands under the
+                # template's (possibly new-mesh) sharding
                 out.append(jax.device_put(arr.astype(ref.dtype),
                                           ref.sharding))
             else:
                 out.append(jax.device_put(arr.astype(ref.dtype)))
         return jax.tree.unflatten(treedef, out), manifest
 
+    def read_manifest(self, step: int | None = None) -> dict | None:
+        """The manifest alone (no arrays) — how an elastic restart reads
+        the recorded plan spec before building any state."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None
+        path = os.path.join(self.dir, f"step-{step}", "manifest.json")
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointError(
+                f"step-{step} has no readable manifest ({e}) — torn "
+                f"checkpoint directory; remove it or restore an earlier "
+                f"step") from e
+
     def latest_step(self) -> int | None:
-        steps = [int(d.split("-")[1]) for d in os.listdir(self.dir)
-                 if d.startswith("step-")]
-        return max(steps) if steps else None
+        return max(self._committed(), default=None)
+
+    def sweep_tmp(self) -> list[str]:
+        """Remove leftover `tmp-*` staging directories (a crash mid-save
+        abandons them; they are never a valid restore source)."""
+        swept = []
+        for d in os.listdir(self.dir):
+            if d.startswith("tmp-"):
+                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+                swept.append(d)
+        return swept
 
     def wait(self):
         """Block until pending async saves are durable."""
@@ -107,6 +186,16 @@ class CheckpointManager:
         self._raise_pending()
 
     # ---------------- internals ----------------
+    def _committed(self) -> list[int]:
+        """Committed step numbers; malformed names (step-abc, step-, plain
+        files) are ignored instead of crashing the scan."""
+        out = []
+        for d in os.listdir(self.dir):
+            m = _STEP_RE.match(d)
+            if m and os.path.isdir(os.path.join(self.dir, d)):
+                out.append(int(m.group(1)))
+        return out
+
     def _raise_pending(self):
         if self._error:
             raise self._error.pop()
@@ -130,15 +219,13 @@ class CheckpointManager:
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
-            import shutil
             shutil.rmtree(final)
         os.replace(tmp, final)             # atomic commit
         self._gc()
 
     def _gc(self):
-        steps = sorted(int(d.split("-")[1]) for d in os.listdir(self.dir)
-                       if d.startswith("step-"))
+        self.sweep_tmp()
+        steps = sorted(self._committed())
         for s in steps[:-self.keep] if self.keep else []:
-            import shutil
             shutil.rmtree(os.path.join(self.dir, f"step-{s}"),
                           ignore_errors=True)

@@ -67,6 +67,9 @@ class PlanError(ValueError):
     the nearest executable demotion so callers can fix their map."""
 
 
+PLAN_SCHEMA = "repro/plan@1"
+
+
 # ---------------------------------------------------------------------------
 # Dist -> ConvSharding lowering
 # ---------------------------------------------------------------------------
@@ -272,6 +275,29 @@ class NetworkPlan:
         """Placement spec for the NHWC tensor feeding layer `name`, with the
         geometry fit applied (so hosts can device_put the batch directly)."""
         return self.sharding(name).fit(h, w, k, s, mesh).x_spec()
+
+    # -- persistence --------------------------------------------------------
+    def to_spec(self, mesh=None, *, mem_limit: float | None = None,
+                config_hash: str | None = None,
+                calibration_fingerprint: str | None = None) -> dict:
+        """The JSON-able plan record checkpoints carry (``repro/plan@1``):
+        per-layer solved Dists, the mesh shape the solve ran on, the
+        capacity limit it honored, and config/calibration fingerprints —
+        everything an elastic restart needs to lower this plan onto a new
+        mesh (plan_from_spec) or re-solve it under the same constraints."""
+        layers = {}
+        for lp in self.layers.values():
+            d = lp.dist if lp.dist is not None \
+                else _sharding_to_dist(lp.sharding, lp.name)
+            layers[lp.name] = {"name": d.name,
+                               "dims": {k: list(v)
+                                        for k, v in d.dims.items()}}
+        return {"schema": PLAN_SCHEMA,
+                "layers": layers,
+                "mesh": _mesh_shape(mesh) or None,
+                "mem_limit": mem_limit,
+                "config_hash": config_hash,
+                "calibration_fingerprint": calibration_fingerprint}
 
     # -- execution ----------------------------------------------------------
     def reshard(self, x, name: str, mesh=None):
@@ -618,6 +644,50 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
                     f"footprints (weights/acts/halo/grads):\n"
                     + "\n".join(lines + notes))
     return NetworkPlan(layers=compiled, predicted=predicted)
+
+
+# ---------------------------------------------------------------------------
+# plan-spec recovery (the checkpoint round trip)
+# ---------------------------------------------------------------------------
+
+def dists_from_spec(spec: Mapping) -> dict[str, Dist]:
+    """Reconstruct the solved {layer: Dist} map from a ``repro/plan@1``
+    record (NetworkPlan.to_spec / a checkpoint manifest's "plan" entry)."""
+    if spec.get("schema") != PLAN_SCHEMA:
+        raise PlanError(f"not a {PLAN_SCHEMA} record "
+                        f"(schema={spec.get('schema')!r})")
+    return {name: Dist(o["name"],
+                       {k: tuple(v) for k, v in o["dims"].items()})
+            for name, o in spec["layers"].items()}
+
+
+def plan_from_spec(spec: Mapping, specs: Sequence[ConvLayer], mesh, *,
+                   machine: Machine | None = None,
+                   table: EmpiricalTable | None = None,
+                   overlap: bool = True,
+                   mem_limit: float | None = None,
+                   opt_words: float = 1.0) -> NetworkPlan:
+    """Lower a stored plan spec onto `mesh` — reshard-on-restore.
+
+    The recorded Dists name mesh *axes* ("data", "model"), not device
+    counts, so the same spec lowers onto any factorization: compile_plan's
+    normalization drops axes the new mesh collapsed to size 1 and the
+    §III-A geometry fit demotes splits the new axis sizes no longer divide
+    — both recorded in the plan notes.  Pass the checkpoint's own
+    `mem_limit` to re-validate capacity on the new mesh; a spec that
+    cannot fit (or that covers different layers than `specs`) raises
+    PlanError, at which point the caller re-solves plan_line/plan_graph
+    from scratch under the same limit.
+    """
+    dists = dists_from_spec(spec)
+    missing = [l.name for l in specs if l.name not in dists]
+    if missing:
+        raise PlanError(
+            f"stored plan ({PLAN_SCHEMA}) has no entry for layers "
+            f"{missing} — the architecture changed; re-solve instead")
+    return compile_plan(dists, specs, mesh, machine=machine, table=table,
+                        overlap=overlap, mem_limit=mem_limit,
+                        opt_words=opt_words)
 
 
 # ---------------------------------------------------------------------------

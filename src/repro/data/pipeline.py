@@ -49,31 +49,59 @@ def synthetic_lm_batch(step: int, batch: int, seq: int, vocab: int) -> dict:
 
 
 class Prefetcher:
-    """Double-buffered host-side prefetch of a step-indexed batch factory."""
+    """Double-buffered host-side prefetch of a step-indexed batch factory.
+
+    Queue entries are tagged with their step index, and `get(step)` is
+    step-addressable: a rollback (fault recovery replaying from the last
+    checkpoint) seeks the stream backward and the filler thread restarts
+    at the requested step, so the replay consumes the *identical* batches
+    the failed attempt did — the determinism the resilient loop's contract
+    promises.  Requests ahead of the stream skip stale entries forward.
+    """
 
     def __init__(self, make_batch: Callable[[int], dict], start_step: int = 0,
                  depth: int = 2):
         self._make = make_batch
-        self._step = start_step
-        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._depth = depth
+        self._start(start_step)
+
+    def _start(self, step: int):
+        self._q: queue.Queue = queue.Queue(maxsize=self._depth)
         self._stop = threading.Event()
-        self._t = threading.Thread(target=self._fill, daemon=True)
+        self._t = threading.Thread(target=self._fill,
+                                   args=(step, self._q, self._stop),
+                                   daemon=True)
         self._t.start()
 
-    def _fill(self):
-        s = self._step
-        while not self._stop.is_set():
+    def _fill(self, s: int, q: queue.Queue, stop: threading.Event):
+        while not stop.is_set():
             try:
-                self._q.put(self._make(s), timeout=0.2)
+                q.put((s, self._make(s)), timeout=0.2)
                 s += 1
             except queue.Full:
                 continue
+
+    def seek(self, step: int):
+        """Restart the stream at `step` (rollback rewind)."""
+        self._stop.set()
+        self._t.join()
+        self._start(step)
+
+    def get(self, step: int) -> dict:
+        """The batch for exactly `step`: drains forward past stale entries,
+        rewinds the stream when `step` is behind it."""
+        while True:
+            s, b = self._q.get()
+            if s == step:
+                return b
+            if s > step:
+                self.seek(step)
 
     def __iter__(self) -> Iterator[dict]:
         return self
 
     def __next__(self) -> dict:
-        return self._q.get()
+        return self._q.get()[1]
 
     def close(self):
         self._stop.set()

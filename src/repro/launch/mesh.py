@@ -22,12 +22,13 @@ DATA_AXES = ("pod", "data")     # axes that shard the sample (N) dimension
 MODEL_AXIS = "model"            # the paper's fine-grained axis
 
 
-def _mk(shape, axes):
+def _mk(shape, axes, devices=None):
+    kw = {"devices": devices} if devices is not None else {}
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is None:       # pre-AxisType jax: Auto is the only behavior
-        return jax.make_mesh(shape, axes)
+        return jax.make_mesh(shape, axes, **kw)
     return jax.make_mesh(shape, axes,
-                         axis_types=(axis_type.Auto,) * len(axes))
+                         axis_types=(axis_type.Auto,) * len(axes), **kw)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -36,21 +37,44 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _mk(shape, axes)
 
 
-def make_mesh(data: int = 1, model: int = 1, pod: int = 1):
+def make_mesh(data: int = 1, model: int = 1, pod: int = 1, devices=None):
     """Small/elastic mesh for tests, examples and CPU runs.
 
     Always uses the same axis names as production so every sharding rule and
     shard_map island is identical from 1 chip to 512 — this is the elastic-
     scaling contract: checkpoints are mesh-independent (global shapes) and any
     (pod, data, model) factorization of the available devices works.
+
+    `devices` restricts the mesh to an explicit device list — how an
+    elastic restart rebuilds over the *survivors* of a device loss (and
+    how tests carve a 4-device mesh out of an 8-device backend).
     """
-    ndev = jax.device_count()
+    ndev = len(devices) if devices is not None else jax.device_count()
     if pod * data * model > ndev:
         raise ValueError(f"mesh {(pod, data, model)} needs {pod*data*model} "
                          f"devices, have {ndev}")
+    if devices is not None:
+        devices = list(devices)[:pod * data * model]
     if pod > 1:
-        return _mk((pod, data, model), ("pod", "data", "model"))
-    return _mk((data, model), ("data", "model"))
+        return _mk((pod, data, model), ("pod", "data", "model"), devices)
+    return _mk((data, model), ("data", "model"), devices)
+
+
+def elastic_factorization(n: int, *, batch: int | None = None
+                          ) -> tuple[int, int]:
+    """A (data, model) factorization of `n` surviving devices.
+
+    Prefers the most balanced split whose data size divides the global
+    batch (sample parallelism needs N % data == 0); when nothing divides —
+    e.g. 3 survivors with batch 4 — everything lands on the model axis,
+    where the paper's fine-grained spatial/CF parallelism needs no batch
+    divisibility at all.  This is what makes a 4->3 shrink solvable.
+    """
+    best = 1
+    for data in range(1, int(n ** 0.5) + 1):
+        if n % data == 0 and (batch is None or batch % data == 0):
+            best = data
+    return best, n // best
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

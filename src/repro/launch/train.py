@@ -33,7 +33,7 @@ from repro.checkpoint.checkpoint import CheckpointManager
 from repro.configs import registry
 from repro.data import pipeline
 from repro.launch import shardings as SH
-from repro.launch.mesh import make_mesh, batch_axes
+from repro.launch.mesh import batch_axes, elastic_factorization, make_mesh
 from repro.optim.optimizer import adamw, sgd, warmup_cosine
 from repro.runtime.fault_tolerance import ResilientLoop, StragglerMonitor
 from repro.train.metrics import MetricsLogger, debug_nan_check
@@ -78,7 +78,7 @@ def build_cnn_plan(args, arch, cfg, mesh, ba):
         from repro.models.cnn import meshnet as M
         specs = M.layer_specs(cfg, args.batch)
         graph = None
-    machine, table = TPU_V5E, None
+    machine, table, calib_fp = TPU_V5E, None, None
     if args.calibrate and args.strategy != "auto":
         # measured costs only feed the solver — don't spend minutes
         # microbenchmarking for a plan that ignores them
@@ -87,6 +87,7 @@ def build_cnn_plan(args, arch, cfg, mesh, ba):
                         args.strategy)
     elif args.calibrate:
         from repro.core import calibrate as calib
+        from repro.utils import fingerprint
         t0 = time.time()
         # honor --no-cf: don't spend startup time measuring CF candidate
         # shapes and collective sizes the solver is forbidden to pick
@@ -95,6 +96,7 @@ def build_cnn_plan(args, arch, cfg, mesh, ba):
         print(f"calibration ready ({time.time() - t0:.2f}s, "
               f"{len(cal.table)} table entries)")
         machine, table = cal.machine, cal.table
+        calib_fp = fingerprint(cal.to_json())
     mem_limit = parse_mem_limit(args.mem_limit)
     if mem_limit and args.strategy != "auto":
         logging.warning("--mem-limit constrains the --strategy auto solve "
@@ -119,17 +121,49 @@ def build_cnn_plan(args, arch, cfg, mesh, ba):
         plan = plan_lib.NetworkPlan.uniform(
             ConvSharding(batch_axes=ba, h_axis="model"),
             [l.name for l in specs])
-    return plan, specs
+    return plan, specs, calib_fp
+
+
+def plan_record(args, cfg, extras, mesh) -> dict | None:
+    """The ``repro/plan@1`` spec recorded in every checkpoint manifest:
+    the solved per-layer dists + the solve's inputs (mesh shape,
+    mem_limit, config hash, calibration fingerprint) — what an elastic
+    restart lowers/re-solves on a new mesh (core.plan.plan_from_spec)."""
+    plan = extras.get("plan")
+    if plan is None:
+        return None
+    from repro.utils import fingerprint
+    return plan.to_spec(
+        mesh, mem_limit=parse_mem_limit(args.mem_limit),
+        config_hash=fingerprint(cfg),
+        calibration_fingerprint=extras.get("calib_fp"))
+
+
+def on_mesh(tree, mesh):
+    """Pin every leaf to `mesh`: leaves already placed there (e.g. params
+    under their fsdp specs) pass through; everything else — notably the
+    scalar optimizer counters opt.init leaves uncommitted on one device —
+    is replicated.  A restore template must be *fully* committed to its
+    mesh or reshard-on-restore would re-commit stray leaves to a single
+    device and the jitted step would see mixed device sets."""
+    devs = set(np.asarray(mesh.devices).ravel().tolist())
+    def fix(x):
+        sh = getattr(x, "sharding", None)
+        if sh is not None and set(sh.device_set) == devs:
+            return x
+        return jax.device_put(x, NamedSharding(mesh, P()))
+    return jax.tree.map(fix, tree)
 
 
 def build(args, mesh):
     arch = registry.canon(args.arch)
     ba = batch_axes(mesh)
-    extras = {"arch": arch, "plan": None, "specs": None, "layer_names": None}
+    extras = {"arch": arch, "plan": None, "specs": None, "layer_names": None,
+              "calib_fp": None}
     if arch in registry.CNN_ARCHS:
         cfg = registry.get(arch, smoke=args.smoke)
-        plan, specs = build_cnn_plan(args, arch, cfg, mesh, ba)
-        extras.update(plan=plan, specs=specs)
+        plan, specs, calib_fp = build_cnn_plan(args, arch, cfg, mesh, ba)
+        extras.update(plan=plan, specs=specs, calib_fp=calib_fp)
         if arch == "resnet50":
             from repro.models.cnn import resnet as M
             mk = lambda s: pipeline.synthetic_imagenet_batch(
@@ -238,6 +272,21 @@ def main():
                     choices=["none", "bf16", "int8_ef"])
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--elastic", action="store_true",
+                    help="survive device loss: on a DeviceLoss step fault "
+                         "the loop rebuilds the mesh from the surviving "
+                         "devices (launch.mesh.elastic_factorization), "
+                         "re-solves the plan on the shrunk mesh under the "
+                         "same --mem-limit, reshards the last checkpoint "
+                         "onto it and resumes the deterministic batch "
+                         "stream — CapacityError surfaces with the usual "
+                         "diagnostics when nothing fits the survivors")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="fault injection (runtime.chaos): e.g. 'raise@7' "
+                         "(step fault), 'kill@5' / 'kill@5x2' (drop "
+                         "devices -> DeviceLoss; pair with --elastic), "
+                         "'corrupt@3' (plant checkpoint-tmp debris); "
+                         "comma-compose")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics", nargs="?", const="METRICS.jsonl",
                     default=None, metavar="PATH",
@@ -273,13 +322,18 @@ def main():
         TrainStepConfig(grad_accum=args.grad_accum, precision=prec,
                         pod_compression=args.pod_compression))
     ck = CheckpointManager(args.ckpt_dir, keep=3, async_save=True)
-    state = (params, opt.init(params), None)
+    state = on_mesh((params, opt.init(params), None), mesh)
     start = 0
     restored, manifest = ck.restore(state) if ck.latest_step() else (None,
                                                                      None)
     if restored is not None:
         state, start = restored, manifest["extra"]["step"]
         print(f"resumed from step {start}")
+        rec = manifest.get("plan")
+        if rec and rec.get("mesh") and rec["mesh"] != dict(mesh.shape):
+            print(f"reshard-on-restore: checkpoint recorded mesh "
+                  f"{rec['mesh']}, restoring onto {dict(mesh.shape)} "
+                  f"(global arrays re-placed under the current plan)")
 
     pf = pipeline.Prefetcher(mk, start_step=start)
     mon = StragglerMonitor()
@@ -290,16 +344,22 @@ def main():
                  mesh=dict(mesh.shape), batch=args.batch, steps=args.steps,
                  strategy=args.strategy, start_step=start)
 
+    # mutable execution context: an elastic remesh swaps the compiled step,
+    # the batch placer and the recorded plan spec without rebuilding the
+    # closures the loop already holds
+    ctx = {"tstep": tstep, "put": put, "layer_names": extras["layer_names"],
+           "plan_spec": plan_record(args, cfg, extras, mesh)}
+
     def make_step():
         def run(state, step):
             p, o, ef = state
-            b = put(next(pf))
-            p, o, ef, m = tstep(p, o, ef, b)
+            b = ctx["put"](pf.get(step))
+            p, o, ef, m = ctx["tstep"](p, o, ef, b)
             losses.append(float(m["loss"]))
             if args.debug_nans:
                 host = {k: float(v) for k, v in m.items()
                         if k in ("loss", "grad_norm")}
-                debug_nan_check(step, host, p, extras["layer_names"])
+                debug_nan_check(step, host, p, ctx["layer_names"])
             dt = (time.time() - t0) / (len(losses) or 1)
             mlog.log_step(step, losses[-1], step_time_s=dt,
                           samples_per_s=args.batch / dt if dt else None,
@@ -307,10 +367,45 @@ def main():
             return (p, o, ef), m
         return run
 
+    def remesh(survivors):
+        """Elastic restart: rebuild mesh + plan + step over the survivors.
+
+        Re-runs the full build (so --strategy auto re-solves under the same
+        --mem-limit on the shrunk mesh — CapacityError surfaces here when
+        nothing fits) and returns the step factory plus a state template
+        sharded under the new mesh; the loop reshards-on-restore the last
+        checkpoint's global arrays into it."""
+        data, model = elastic_factorization(len(survivors),
+                                            batch=args.batch)
+        print(f"elastic restart: {len(survivors)} survivors -> mesh "
+              f"data={data} model={model}; re-solving plan")
+        new_mesh = make_mesh(data=data, model=model,
+                             devices=list(survivors))
+        cfg2, params2, opt2, loss2, _, put2, prec2, extras2 = \
+            build(args, new_mesh)
+        ctx["tstep"] = make_train_step(
+            lambda p, b: loss2(p, b), opt2, new_mesh,
+            TrainStepConfig(grad_accum=args.grad_accum, precision=prec2,
+                            pod_compression=args.pod_compression))
+        ctx["put"] = put2
+        ctx["layer_names"] = extras2["layer_names"]
+        ctx["plan_spec"] = plan_record(args, cfg2, extras2, new_mesh)
+        return make_step, on_mesh((params2, opt2.init(params2), None),
+                                  new_mesh)
+
     loop = ResilientLoop(ckpt=ck, make_step=make_step,
-                         ckpt_every=args.ckpt_every)
-    state, step, metrics = loop.run(state, start, args.steps, monitor=mon)
-    ck.save(step, state, extra={"step": step})
+                         ckpt_every=args.ckpt_every,
+                         remesh=remesh if args.elastic else None,
+                         metrics=mlog,
+                         plan_spec=lambda: ctx["plan_spec"])
+    inject = None
+    if args.chaos:
+        from repro.runtime import chaos
+        inject = chaos.parse(args.chaos, ckpt_dir=args.ckpt_dir,
+                             devices=list(mesh.devices.flat))
+    state, step, metrics = loop.run(state, start, args.steps, monitor=mon,
+                                    inject_failure=inject)
+    ck.save(step, state, extra={"step": step}, plan=ctx["plan_spec"])
     ck.wait()
     pf.close()
     mlog.log_done(step, loss=losses[-1], straggler=mon.stats)

@@ -1,19 +1,24 @@
 """Fault-tolerant training driver + straggler monitoring + elastic restart.
 
 On a 1000+-node fleet the failure model is: any step may raise (XLA error,
-host OOM, preempted worker surfacing as a collective timeout).  The driver's
-contract:
+host OOM, preempted worker surfacing as a collective timeout), and a node
+may *leave* — the device set shrinks.  The driver's contract:
 
   * checkpoint every `ckpt_every` steps (async, atomic — see
-    repro.checkpoint);
-  * on failure: roll back to the latest committed checkpoint, rebuild the
-    step function (fresh compilation), continue; give up after
+    repro.checkpoint), recording the solved plan spec in the manifest;
+  * on a step fault: roll back to the latest committed checkpoint, rebuild
+    the step function (fresh compilation), continue; give up after
     `max_failures` *consecutive* failures;
+  * on device loss (`DeviceLoss`, carrying the surviving devices): hand
+    the survivors to the `remesh` callback, which rebuilds the mesh from
+    them, re-solves the plan on the shrunk mesh under the same mem_limit
+    (launch.train --elastic), and returns a fresh step factory plus a
+    state template sharded under the new mesh — the checkpoint's global
+    arrays then reshard-on-restore into it;
   * deterministic data: batches are derived from the step index, so a
     restart replays the exact stream (no sample skips/duplicates);
-  * elastic restart: because checkpoints are mesh-independent, the restore
-    path accepts a *different* mesh factorization than the failed run —
-    `launch.train` re-calls make_mesh with whatever devices remain.
+  * observability: with a `metrics` MetricsLogger every fault, rollback,
+    remesh and flagged straggler emits a ``repro/metrics@1`` event record.
 
 StragglerMonitor implements the detection half of straggler mitigation: an
 online median/MAD filter over step times; slow steps beyond `k` MADs are
@@ -28,11 +33,25 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import numpy as np
 
 log = logging.getLogger("repro.runtime")
+
+
+class DeviceLoss(RuntimeError):
+    """A step fault caused by devices leaving the fleet.
+
+    Carries the devices that survive; a `ResilientLoop` with a `remesh`
+    callback recovers elastically, anything else treats it as fatal (a
+    same-mesh retry cannot succeed without the lost devices).
+    """
+
+    def __init__(self, survivors: Sequence, message: str | None = None):
+        self.survivors = list(survivors)
+        super().__init__(message or
+                         f"device loss: {len(self.survivors)} survivors")
 
 
 class StragglerMonitor:
@@ -72,13 +91,44 @@ class ResilientLoop:
     """Runs `run_step(state, step) -> state, metrics` with checkpoint/restart.
 
     `state` is an arbitrary pytree (params, opt state, ef state, ...).
-    `make_step` rebuilds the compiled step fn after a failure (it may also
-    re-make the mesh — elastic restart).
+    `make_step` rebuilds the compiled step fn after a failure.
+    `remesh` (optional) handles `DeviceLoss`: survivors ->
+    (new make_step factory, state template sharded under the new mesh);
+    the loop then reshards-on-restore the last checkpoint into the
+    template and replays from its step.  Without `remesh`, DeviceLoss is
+    fatal — retrying the same mesh without the lost devices cannot work.
+    `plan_spec` (dict or zero-arg callable returning one) is recorded in
+    every checkpoint manifest; `metrics` (train.metrics.MetricsLogger)
+    streams fault/rollback/remesh/straggler events as JSONL records.
     """
     ckpt: Any                      # CheckpointManager
     make_step: Callable[[], Callable]
     ckpt_every: int = 50
     max_failures: int = 3
+    remesh: Callable[[Sequence], tuple[Callable, Any]] | None = None
+    metrics: Any = None            # MetricsLogger | None
+    plan_spec: Any = None          # dict | Callable[[], dict] | None
+
+    def _plan(self) -> dict | None:
+        return self.plan_spec() if callable(self.plan_spec) \
+            else self.plan_spec
+
+    def _event(self, kind: str, **fields):
+        if self.metrics is not None:
+            self.metrics.log_event(kind, **fields)
+
+    def _rollback(self, state_like, start_step: int):
+        """Restore the latest committed checkpoint into `state_like`'s
+        structure and shardings (reshard-on-restore); fall back to the
+        template itself at `start_step` when nothing is committed yet."""
+        restored, manifest = self.ckpt.restore(state_like)
+        if restored is not None:
+            step = manifest["extra"]["step"]
+            log.info("rolled back to step %d", step)
+            self._event("rollback", step=step)
+            return restored, step
+        self._event("rollback", step=start_step, note="no checkpoint")
+        return state_like, start_step
 
     def run(self, state, start_step: int, num_steps: int,
             monitor: StragglerMonitor | None = None,
@@ -94,29 +144,44 @@ class ResilientLoop:
                     inject_failure(step)           # test hook
                 state, metrics = step_fn(state, step)
                 dt = time.perf_counter() - t0
-                if monitor:
-                    monitor.record(step, dt)
+                if monitor and monitor.record(step, dt):
+                    self._event("straggler", step=step, dt_s=dt,
+                                **monitor.stats)
                 failures = 0
                 step += 1
                 if step % self.ckpt_every == 0:
-                    self.ckpt.save(step, state, extra={"step": step})
+                    self.ckpt.save(step, state, extra={"step": step},
+                                   plan=self._plan())
             except KeyboardInterrupt:
                 raise
+            except DeviceLoss as e:
+                failures += 1
+                log.error("step %d lost devices (%d survive); "
+                          "failure %d/%d", step, len(e.survivors),
+                          failures, self.max_failures)
+                self._event("fault", step=step, error="DeviceLoss",
+                            survivors=len(e.survivors), failures=failures)
+                if failures > self.max_failures or self.remesh is None:
+                    raise
+                self.ckpt.wait()
+                # elastic restart: new mesh + re-solved plan from the
+                # survivors, then reshard-on-restore into its template
+                self.make_step, state_like = self.remesh(e.survivors)
+                self._event("remesh", step=step,
+                            n_devices=len(e.survivors))
+                state, step = self._rollback(state_like, start_step)
+                step_fn = self.make_step()
             except Exception as e:     # noqa: BLE001 — any step fault
                 failures += 1
                 log.error("step %d failed (%s); failure %d/%d",
                           step, type(e).__name__, failures,
                           self.max_failures)
+                self._event("fault", step=step, error=type(e).__name__,
+                            failures=failures)
                 if failures > self.max_failures:
                     raise
                 self.ckpt.wait()
-                restored, manifest = self.ckpt.restore(state)
-                if restored is not None:
-                    state = restored
-                    step = manifest["extra"]["step"]
-                    log.info("rolled back to step %d", step)
-                else:
-                    step = start_step
-                step_fn = self.make_step()          # fresh compile / remesh
+                state, step = self._rollback(state, start_step)
+                step_fn = self.make_step()          # fresh compile
         self.ckpt.wait()
         return state, step, metrics

@@ -68,6 +68,18 @@ def same_pads(k: int, s: int) -> tuple[int, int]:
     return lo, total - lo
 
 
+def fingerprint(obj: Any) -> str:
+    """Short stable content hash of a JSON-able object (dataclasses and
+    tuples welcome) — how checkpoint manifests identify the model config
+    and calibration a plan was solved against without embedding them."""
+    import hashlib
+    import json as _json
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        obj = dataclasses.asdict(obj)
+    blob = _json.dumps(obj, sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
 def tree_size_bytes(tree: Any) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
 

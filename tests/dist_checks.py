@@ -3,7 +3,7 @@ process keeps a single CPU device (the 512-device env is dry-run-only).
 
 Usage:  python tests/dist_checks.py <group>
 Groups: conv | attention | ssm | models | train | compress | plan | cf |
-        spatial2d | multiaxis | memfit | overlap | trace
+        spatial2d | multiaxis | memfit | overlap | trace | elastic
 Exits 0 on success; any assertion failure exits non-zero.
 """
 import os
@@ -1017,12 +1017,220 @@ def check_compress():
     assert err1 < 0.05  # int8 quantization error is small
 
 
+def check_elastic():
+    """The chaos-lane acceptance (ISSUE PR-8): a 4-device training run is
+    faulted mid-run and must recover with a loss trajectory matching the
+    uninterrupted oracle.  Three fault modes, selected by $CHAOS_MODE:
+
+      step-fault   raise at step 7, same-mesh rollback to the step-6
+                   checkpoint; post-restore losses match bitwise-ish
+      kill-device  drop 1 of 4 devices at step 7 (DeviceLoss) -> elastic
+                   remesh onto the 3 survivors, plan recovered from the
+                   checkpoint's repro/plan@1 record (plan_from_spec, with
+                   the designed PlanError -> fresh re-solve fallback),
+                   reshard-on-restore, resume; losses match numerically
+      corrupt-tmp  plant mid-save debris (torn tmp dir + malformed step
+                   entry) then fault: latest_step must ignore the garbage,
+                   rollback picks the valid step-6, gc sweeps the tmp
+
+    With $CHAOS_ARTIFACTS_DIR set, the checkpoint dir, metrics JSONL and
+    loss trajectories land there (CI uploads them on failure)."""
+    import json
+    import shutil
+    import tempfile
+    from repro.checkpoint.checkpoint import CheckpointManager
+    from repro.core import plan as plan_lib
+    from repro.core.perfmodel import TPU_V5E
+    from repro.data.pipeline import synthetic_mesh_batch
+    from repro.models.cnn import meshnet
+    from repro.launch.mesh import elastic_factorization
+    from repro.optim.optimizer import sgd
+    from repro.runtime import chaos
+    from repro.runtime.fault_tolerance import ResilientLoop, \
+        StragglerMonitor
+    from repro.train.metrics import MetricsLogger
+    from repro.train.train_loop import make_train_step, TrainStepConfig, \
+        shard_tree
+    from repro.utils import FP32
+
+    mode = os.environ.get("CHAOS_MODE", "kill-device")
+    assert mode in ("step-fault", "kill-device", "corrupt-tmp"), mode
+    NUM, EVERY, FAULT, BATCH = 10, 3, 7, 4
+    devices = jax.devices()[:4]
+    mesh4 = make_mesh(data=2, model=2, devices=devices)
+    cfg = meshnet.MeshNetConfig("t", input_hw=24, in_channels=6,
+                                convs_per_block=1, widths=(12, 24),
+                                bn_scope="global")
+    specs = meshnet.layer_specs(cfg, BATCH)
+    opt = sgd(0.05, momentum=0.9)
+
+    # a capacity limit both the 4-device and the shrunk 3-device solve can
+    # meet — the elastic restart re-solves under the SAME limit
+    peak4 = plan_lib.plan_line(TPU_V5E, specs, mesh4) \
+        .predicted["memory"]["peak_bytes"]
+    peak3 = plan_lib.plan_line(TPU_V5E, specs, {"data": 1, "model": 3}) \
+        .predicted["memory"]["peak_bytes"]
+    limit = 1.25 * max(peak4, peak3)
+    plan4 = plan_lib.plan_line(TPU_V5E, specs, mesh4, mem_limit=limit)
+
+    def init_state(mesh):
+        # a fresh state every time: the train step DONATES its buffers,
+        # so the oracle run and the faulted run cannot share arrays
+        params = shard_tree(meshnet.init(jax.random.PRNGKey(0), cfg),
+                            mesh, lambda x: P())
+        return shard_tree((params, opt.init(params), None),
+                          mesh, lambda x: P())
+
+    def make_rig(mesh, plan):
+        loss = functools.partial(meshnet.loss_fn, cfg=cfg, plan=plan,
+                                 mesh=mesh)
+        tstep = make_train_step(lambda p, b: loss(p, b), opt, mesh,
+                                TrainStepConfig(precision=FP32))
+        first = specs[0]
+        spec = plan.input_spec(first.name, first.h, first.w, first.k,
+                               first.s, mesh)
+
+        def put(b):
+            return {"image": jax.device_put(
+                        b["image"], NamedSharding(mesh, spec)),
+                    "label": jax.device_put(
+                        b["label"], NamedSharding(mesh, P("data")))}
+        return tstep, put
+
+    tstep4, put4 = make_rig(mesh4, plan4)
+
+    # --- the uninterrupted oracle -----------------------------------------
+    oracle = []
+    p, o, ef = init_state(mesh4)
+    for s in range(NUM):
+        b = put4(synthetic_mesh_batch(s, BATCH, cfg.input_hw,
+                                      cfg.in_channels, out_hw=cfg.out_hw))
+        p, o, ef, m = tstep4(p, o, ef, b)
+        oracle.append(float(m["loss"]))
+
+    # --- the faulted run --------------------------------------------------
+    art = os.environ.get("CHAOS_ARTIFACTS_DIR")
+    base = art or tempfile.mkdtemp()
+    os.makedirs(base, exist_ok=True)
+    ckdir = os.path.join(base, "ckpt")
+    metrics_path = os.path.join(base, "metrics.jsonl")
+    try:
+        ck = CheckpointManager(ckdir, keep=3, async_save=True)
+        mlog = MetricsLogger(metrics_path, echo=False)
+        plan_spec = plan4.to_spec(mesh4, mem_limit=limit, config_hash="t",
+                                  calibration_fingerprint=None)
+        ctx = {"tstep": tstep4, "put": put4, "plan_spec": plan_spec}
+        got: dict[int, float] = {}
+
+        def make_step():
+            def run(state, step):
+                p, o, ef = state
+                b = ctx["put"](synthetic_mesh_batch(
+                    step, BATCH, cfg.input_hw, cfg.in_channels,
+                    out_hw=cfg.out_hw))
+                p, o, ef, m = ctx["tstep"](p, o, ef, b)
+                got[step] = float(m["loss"])
+                return (p, o, ef), m
+            return run
+
+        def remesh(survivors):
+            assert len(survivors) == 3, survivors
+            data, model = elastic_factorization(len(survivors),
+                                                batch=BATCH)
+            mesh3 = make_mesh(data=data, model=model,
+                              devices=list(survivors))
+            rec = ck.read_manifest()["plan"]
+            assert rec["schema"] == plan_lib.PLAN_SCHEMA, rec
+            assert rec["mesh"] == {"data": 2, "model": 2}, rec
+            try:
+                plan3 = plan_lib.plan_from_spec(
+                    rec, specs, mesh3, machine=TPU_V5E,
+                    mem_limit=rec["mem_limit"])
+            except plan_lib.PlanError:
+                # the stored dists don't lower onto the shrunk mesh —
+                # the designed fallback is a fresh solve, SAME limit
+                plan3 = plan_lib.plan_line(TPU_V5E, specs, mesh3,
+                                           mem_limit=rec["mem_limit"])
+            assert plan3.predicted["memory"]["peak_bytes"] <= \
+                rec["mem_limit"], plan3.describe()
+            tstep3, put3 = make_rig(mesh3, plan3)
+            template3 = init_state(mesh3)
+            ctx.update(tstep=tstep3, put=put3,
+                       plan_spec=plan3.to_spec(
+                           mesh3, mem_limit=rec["mem_limit"],
+                           config_hash="t",
+                           calibration_fingerprint=None))
+            return make_step, template3
+
+        if mode == "step-fault":
+            inject = chaos.raise_at_step(FAULT)
+            use_remesh = None
+        elif mode == "kill-device":
+            inject = chaos.drop_device_at_step(FAULT, devices=devices)
+            use_remesh = remesh
+        else:
+            inject = chaos.compose(
+                chaos.corrupt_checkpoint_tmp(ckdir, FAULT - 3),
+                chaos.raise_at_step(FAULT))
+            use_remesh = None
+
+        loop = ResilientLoop(ckpt=ck, make_step=make_step,
+                             ckpt_every=EVERY, max_failures=2,
+                             remesh=use_remesh, metrics=mlog,
+                             plan_spec=lambda: ctx["plan_spec"])
+        state, step, _ = loop.run(init_state(mesh4), 0, NUM,
+                                  monitor=StragglerMonitor(),
+                                  inject_failure=inject)
+        mlog.close()
+        assert step == NUM, step
+        assert sorted(got) == list(range(NUM)), sorted(got)
+
+        with open(os.path.join(base, "losses.json"), "w") as f:
+            json.dump({"oracle": oracle,
+                       "got": [got[s] for s in range(NUM)]}, f)
+
+        events = [json.loads(ln) for ln in open(metrics_path)]
+        kinds = [e["kind"] for e in events]
+        assert "fault" in kinds, kinds
+        rollbacks = [e for e in events if e["kind"] == "rollback"]
+        assert rollbacks and rollbacks[0]["step"] == FAULT - 1, rollbacks
+
+        # pre-fault steps ran once on the original mesh: exact agreement
+        np.testing.assert_allclose(
+            [got[s] for s in range(FAULT - 1)], oracle[:FAULT - 1],
+            rtol=1e-6)
+        post = [got[s] for s in range(FAULT - 1, NUM)]
+        if mode == "kill-device":
+            assert "remesh" in kinds, kinds
+            rm = next(e for e in events if e["kind"] == "remesh")
+            assert rm["n_devices"] == 3, rm
+            # the 3-device decomposition reorders the fp math — numeric,
+            # not bitwise, agreement with the oracle trajectory
+            np.testing.assert_allclose(post, oracle[FAULT - 1:],
+                                       rtol=5e-3)
+        else:
+            np.testing.assert_allclose(post, oracle[FAULT - 1:],
+                                       rtol=1e-5)
+        if mode == "corrupt-tmp":
+            left = os.listdir(ckdir)
+            assert not [d for d in left if d.startswith("tmp-")], left
+            assert "step-garbage" in left, left       # ignored, not fatal
+            assert ck.latest_step() == NUM - 1, (ck.latest_step(), left)
+        print(f"elastic[{mode}]: recovered at step {FAULT - 1}, "
+              f"{NUM} steps, max post-restore drift "
+              f"{max(abs(a - b) for a, b in zip(post, oracle[FAULT - 1:])):.2e}")
+    finally:
+        if not art:
+            shutil.rmtree(base, ignore_errors=True)
+
+
 GROUPS = {"conv": check_conv, "attention": check_attention,
           "ssm": check_ssm, "models": check_models, "train": check_train,
           "compress": check_compress, "plan": check_plan,
           "cf": check_cf, "spatial2d": check_spatial2d,
           "multiaxis": check_multiaxis, "memfit": check_memfit,
-          "overlap": check_overlap, "trace": check_trace}
+          "overlap": check_overlap, "trace": check_trace,
+          "elastic": check_elastic}
 
 if __name__ == "__main__":
     GROUPS[sys.argv[1]]()

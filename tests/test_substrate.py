@@ -107,12 +107,15 @@ def test_checkpoint_async_and_atomic():
 
 
 def test_checkpoint_structure_mismatch_raises():
+    from repro.checkpoint.checkpoint import CheckpointError
     d = tempfile.mkdtemp()
     try:
         ck = CheckpointManager(d, async_save=False)
         ck.save(1, {"w": jnp.zeros((3,))})
-        with pytest.raises(AssertionError):
+        with pytest.raises(CheckpointError, match="GLOBAL"):
             ck.restore({"w": jnp.zeros((4,))})
+        with pytest.raises(CheckpointError, match="leaves"):
+            ck.restore({"w": jnp.zeros((3,)), "b": jnp.zeros((2,))})
     finally:
         shutil.rmtree(d)
 
