@@ -18,7 +18,6 @@ def main() -> None:
     kernels_micro.run()
     # roofline summary from dry-run artifacts (if present)
     try:
-        import os
         from benchmarks import roofline
         cells = roofline.load("benchmarks/artifacts/dryrun")
         for (a, s, mesh, v), d in sorted(cells.items()):

@@ -4,7 +4,7 @@ against the §V perf model — the validation loop the paper closes with
 
   PYTHONPATH=src python -m benchmarks.strategy_exec [ndevices] \
       [--out BENCH_strategy.json] [--calibration BENCH_calibration.json] \
-      [--gate] [--gate-tol 0.10] [--reps N] [--attribute]
+      [--gate] [--gate-tol 0.10] [--reps N] [--attribute] [--audit]
 
 Runs on `ndevices` host CPU devices (default 4, set before jax import).
 First the §V cost inputs are calibrated on the live backend
@@ -319,22 +319,12 @@ def run(args) -> int:
     mesh = make_mesh(data=data, model=model)
     uni_sh = ConvSharding(batch_axes=("data",), h_axis="model")
 
-    # --- workloads (same three as always) --------------------------------
-    cfg128 = meshnet.MeshNetConfig("bench", input_hw=128, in_channels=8,
-                                   convs_per_block=2, widths=(16, 32, 32),
-                                   bn_scope="global")
-    cfg16 = meshnet.MeshNetConfig("bench16", input_hw=16, in_channels=8,
-                                  convs_per_block=1, widths=(32, 64, 64),
-                                  bn_scope="global")
-    cfg2k = meshnet.MeshNetConfig("bench2k", input_hw=64, in_channels=8,
-                                  convs_per_block=5, widths=(16, 32),
-                                  bn_scope="global")
-    cfg16p = meshnet.MeshNetConfig("bench16p", input_hw=32, in_channels=8,
-                                   convs_per_block=1, widths=(16, 32, 64),
-                                   bn_scope="global")
-    cfg2ku = meshnet.MeshNetConfig("bench2ku", input_hw=128, in_channels=8,
-                                   convs_per_block=2, widths=(16, 32),
-                                   bn_scope="global")
+    # --- workloads: the ONE registry the static-analysis lane audits -----
+    # (repro.analysis.workloads — keeping the configs there means the
+    # plans this bench times are exactly the plans dryrun --audit proves)
+    from repro.analysis.workloads import (CFG128 as cfg128, CFG16 as cfg16,
+                                          CFG2K as cfg2k, CFG16P as cfg16p,
+                                          CFG2KU as cfg2ku)
     specs128 = meshnet.layer_specs(cfg128, 2)
     specs16 = meshnet.layer_specs(cfg16, 2)
     specs2k = meshnet.layer_specs(cfg2k, 1)
@@ -354,6 +344,7 @@ def run(args) -> int:
 
     workloads = {}
     attr_targets = {}     # --attribute: {workload: (cfg, batch, specs, plan)}
+    audit_targets = {}    # --audit: {workload: (plan, specs, cfg)}
 
     # --- mesh128: the strategy choice is non-trivial on this mesh --------
     # (batch 2 < device count: pure sample parallelism invalid)
@@ -365,6 +356,7 @@ def run(args) -> int:
         "mesh128", cfg128, 2, specs128,
         (("uniform", uni128), ("auto", auto)),
         mesh, args.reps, args.rounds, "uniform", "auto", agree)
+    audit_targets["mesh128"] = (auto, specs128, cfg128)
 
     # --- overlap: the §IV-A latency-hiding A/B on the SAME plan ----------
     # one uniform H-split plan, two arms: overlap=True (interior/boundary
@@ -399,6 +391,7 @@ def run(args) -> int:
         {"same_plan": True, "n_layers_differ": 0, "layers_differ": [],
          "note": "same plan both arms; the A/B toggles overlap only"})
     workloads["overlap"]["calibrated_choice"] = chosen
+    audit_targets["overlap"] = (ov_plan, specs128, cfg128)
     t_ov = workloads["overlap"]["entries"]["overlapped"]["measured_s"]
     t_ser = workloads["overlap"]["entries"]["serialized"]["measured_s"]
     credit = sum(ov_plan.predicted.get("overlap_credit", {}).values())
@@ -437,6 +430,7 @@ def run(args) -> int:
         mesh, args.reps, args.rounds, "uniform", "auto_cf", agree)
     workloads["mesh16cf"]["n_cf_layers"] = n_cf
     attr_targets["mesh16cf"] = (cfg16, 2, specs16, auto_cf)
+    audit_targets["mesh16cf"] = (auto_cf, specs16, cfg16)
 
     # --- mesh2k_proxy: the 2K model's depth (5 convs/block) at reduced
     # resolution, under the 2-D H x W decomposition (W on the data axis,
@@ -452,6 +446,7 @@ def run(args) -> int:
                                    machine, table)),
              ("auto", auto)),
             mesh, args.reps, args.rounds, "hxw", "auto", agree)
+        audit_targets["mesh2k_proxy"] = (auto, specs2k, cfg2k)
 
     # --- mesh16_proxy: the 16x16-mesh decompositions at bench scale.
     # Batch 1 rules out sample parallelism, so the solver composes: CF on
@@ -480,6 +475,7 @@ def run(args) -> int:
         workloads["mesh16_proxy"]["n_cf_spatial_layers"] = n_cfsp
         workloads["mesh16_proxy"]["n_product_axis_layers"] = n_multi
         attr_targets["mesh16_proxy"] = (cfg16p, 1, specs16p, auto)
+        audit_targets["mesh16_proxy"] = (auto, specs16p, cfg16p)
 
     # --- mesh2k_unreachable: the paper's Table-2 memory story as an
     # executable benchmark.  Batch 1: sample parallelism cannot reduce
@@ -526,6 +522,7 @@ def run(args) -> int:
             print(f"# mesh2k_unreachable: limit {limit:.0f}B, uniform "
                   f"{rep_peak:.0f}B (DOES NOT FIT), "
                   f"auto {auto_peak:.0f}B (fits)")
+            audit_targets["mesh2k_unreachable"] = (auto_u, specs2ku, cfg2ku)
 
     # --- ckpt_overhead: async save must stay off the critical path -------
     # (top-level report key, NOT a workload: the ordering gate below
@@ -538,6 +535,22 @@ def run(args) -> int:
           f"{ckpt_overhead['async_ckpt_s']*1e6:.1f}us, ratio "
           f"{ckpt_overhead['overhead_ratio']:.3f} "
           f"(tol {1 + args.ckpt_tol:.2f}x)")
+
+    # --- --audit: static collective audit of the measured plans ----------
+    # (recorded per workload, NOT gated here — the CI static lane gates;
+    # this rides along so BENCH_strategy.json carries the findings next to
+    # the timings they explain)
+    if args.audit:
+        from repro import analysis
+        for name, (plan, specs, cfg) in audit_targets.items():
+            findings = plan.audit(specs, mesh, cfg=cfg, overlap=True,
+                                  hlo=False)
+            errs = analysis.error_count(findings)
+            print(f"# audit/{name}: {len(findings)} finding(s), "
+                  f"{errs} error(s)")
+            workloads[name]["audit"] = {
+                "n_findings": len(findings), "n_errors": errs,
+                "findings": [f.to_json() for f in findings]}
 
     # --- the gate: the optimizer's ordering promise ----------------------
     tol = args.gate_tol
@@ -625,6 +638,12 @@ def main(argv=None) -> int:
                          "per-term drift and write --attribution-out; "
                          "drift beyond 5x warns without failing")
     ap.add_argument("--attribution-out", default="BENCH_attribution.json")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the static collective auditor "
+                         "(repro.analysis) on every measured auto plan "
+                         "and record the findings per workload in the "
+                         "report JSON — lowering-only, never gates here "
+                         "(the CI static lane gates)")
     return run(ap.parse_args(argv))
 
 

@@ -113,6 +113,20 @@ plan = plan_lib.plan_line(machine, layers, mesh)
 print(f"\nexecuting on mesh {dict(mesh.shape)}:")
 print(plan.describe())
 
+# --- static audit: prove costed == executed BEFORE spending a step -------
+# repro.analysis lints the solved plan (divisibility, reshard coverage,
+# memory fit, spec round-trip) and traces the jaxpr of one training step,
+# joining every collective it finds against the cost model's priced
+# inventory — an unpriced collective or phantom charge is an error-severity
+# Finding.  The train driver runs the same gate via `--audit`.
+from repro import analysis
+findings = plan.audit(layers, mesh, cfg=cfg, overlap=True, hlo=False)
+print(f"\nstatic audit of the executing plan "
+      f"({len(findings)} finding(s), "
+      f"{analysis.error_count(findings)} error(s)):")
+print(analysis.format_findings(findings))
+assert analysis.error_count(findings) == 0
+
 loss_fn = functools.partial(meshnet.loss_fn, cfg=cfg, plan=plan, mesh=mesh)
 opt = sgd(0.05, momentum=0.9)
 state = opt.init(params)

@@ -13,7 +13,6 @@ import functools            # noqa: E402
 import tempfile             # noqa: E402
 
 import jax                  # noqa: E402
-import jax.numpy as jnp     # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.checkpoint.checkpoint import CheckpointManager      # noqa: E402

@@ -1,0 +1,26 @@
+"""Static analysis: prove costed == executed before running a step.
+
+Two passes over a compiled NetworkPlan, both lowering-only:
+
+  * lint   — pure-static consistency of the plan object itself
+             (divisibility, load-bearing demotions, reshard coverage,
+             memory fit, spec round-trip);
+  * audit  — the SPMD collective auditor: walk the traced jaxpr (and
+             optionally the lowered StableHLO) of the plan's AOT step and
+             join every executed collective against the perf model's
+             priced inventory.
+
+Entry points: NetworkPlan.audit(), `train.py --audit`,
+`python -m repro.launch.dryrun --audit`, and the CI static lane.
+"""
+from repro.analysis.lint import (Finding, error_count, format_findings,
+                                 lint_plan)
+from repro.analysis.collectives import (audit_meshnet, audit_step_fn,
+                                        collect_ops, plan_inventory)
+from repro.analysis.workloads import WORKLOADS, solve_workload
+
+__all__ = [
+    "Finding", "error_count", "format_findings", "lint_plan",
+    "audit_meshnet", "audit_step_fn", "collect_ops", "plan_inventory",
+    "WORKLOADS", "solve_workload",
+]

@@ -1,5 +1,5 @@
 """2K mesh-tangling model (paper §VI): 6 blocks x 5 convs, 2048^2 x 18 —
 activations exceed one 16 GB GPU at batch 1 (the memory headline)."""
-from repro.models.cnn.meshnet import MESH2K as CONFIG, MeshNetConfig
+from repro.models.cnn.meshnet import MESH2K as CONFIG, MeshNetConfig  # noqa: F401 — registry re-export
 SMOKE = MeshNetConfig("mesh2k-smoke", input_hw=64, in_channels=4,
                       convs_per_block=2, widths=(8, 16, 16))

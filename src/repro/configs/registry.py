@@ -6,7 +6,6 @@ CPU tests).  The paper's own models (resnet50, mesh1k, mesh2k) register too.
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
 
 ARCHS = [

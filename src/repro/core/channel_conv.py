@@ -72,7 +72,7 @@ from repro.core import trace as trace_lib
 from repro.core.spatial_conv import (ConvSharding, _conv_nhwc, _local_conv,
                                      cast_to_weight_dtype, fit_spatial_axis,
                                      spatial_conv2d)
-from repro.utils import same_pads, shard_map
+from repro.utils import replication_policy, same_pads, shard_map
 
 MODES = ("channel", "filter")
 
@@ -359,12 +359,11 @@ def cf_conv2d(x, w, *, strides=(1, 1), sharding: CFSharding, mesh=None,
                            overlap=overlap, backend=backend,
                            channel_chunks=channel_chunks)
     spec = sharding.x_spec()
-    # legacy replication tracking has no rule for pallas_call, so the
-    # Pallas local-conv CF path drops it (forward-verified; take gradients
-    # through the XLA backend on legacy jax — see utils.shard_map).
-    lcr = False if backend == "pallas" else None
-    return shard_map(fn, mesh=mesh, in_specs=(spec, P()),
-                     out_specs=spec, legacy_check_rep=lcr)(x, w)
+    # one repo-wide replication policy per backend (utils.replication_policy;
+    # the static auditor reports which policy each region compiled under)
+    policy = replication_policy(backend)
+    return shard_map(fn, mesh=mesh, in_specs=(spec, P()), out_specs=spec,
+                     legacy_check_rep=policy.legacy_check_rep)(x, w)
 
 
 def cf_bias_add(x, b, *, sharding: CFSharding, mesh=None):

@@ -20,10 +20,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Mapping, Sequence
+from typing import Mapping, Sequence
 
 from repro.core.distribution import Dist
-from repro.utils import cdiv, human_bytes
+from repro.utils import cdiv, human_bytes, same_pads
 
 
 # ---------------------------------------------------------------------------
@@ -403,6 +403,247 @@ def cf_mode_for(layer: ConvLayer, dist: Dist,
     ROADMAP PR-2 leftover: stop picking CF mode blindly)."""
     words = cf_collective_words(layer, dist, mesh_shape)
     return "filter" if words["ag_x"] < words["rs_y"] else "channel"
+
+
+# ---------------------------------------------------------------------------
+# priced-collective inventory (the costed==executed contract, repro.analysis)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSpec:
+    """One priced collective of a layer under a distribution — the unit the
+    static auditor (repro.analysis.collectives) joins the traced jaxpr's
+    collectives against.
+
+    kind:       normalized primitive name: ppermute | psum | reduce_scatter
+                | all_gather.
+    region:     the trace region the runtime issues it under (descriptive).
+    direction:  fwd | bwd.
+    count:      number of primitive ops the runtime issues.
+    bytes:      TOTAL payload bytes across all `count` ops (sum over the
+                ops' input avals — the auditor's byte convention).
+    axes:       mesh axes the collective runs over (matched as a set).
+    term:       the LayerCost term that prices it: fp | bpx | bpw | bpa,
+                or 'none' for comm the model knowingly does not charge.
+    visibility: 'jaxpr' when the op appears in the traced program (inside
+                a shard_map body); 'gspmd' when the partitioner inserts it
+                after lowering (invisible to the static walk — exempt from
+                phantom-charge checks).
+    charged:    whether layer_cost/network_cost actually prices it.  A
+                charged=False + visibility='jaxpr' entry is a *known*
+                unpriced collective (reported as a warning, not an error).
+    """
+    kind: str
+    region: str
+    direction: str
+    count: int
+    bytes: float
+    axes: tuple
+    term: str
+    visibility: str = "jaxpr"
+    charged: bool = True
+
+
+def _conv_split_geometry(layer: ConvLayer, dist: Dist,
+                         mesh_shape: Mapping[str, int]):
+    """(d_loc, do_loc, lo, hi, t_lo, t_hi) of the conv-split spatial dim —
+    W when W is split (H is fully exchanged first in the both-split path,
+    core.spatial_conv._local_conv), else H.  None when neither is split or
+    the kernel needs no halo (same_pads == (0, 0))."""
+    h_ways = dist.ways("H", mesh_shape)
+    w_ways = dist.ways("W", mesh_shape)
+    if h_ways <= 1 and w_ways <= 1:
+        return None
+    lo, hi = same_pads(layer.k, layer.s)
+    if lo == 0 and hi == 0:
+        return None
+    if w_ways > 1:
+        d_loc, do_loc = layer.w // w_ways, layer.w_out // w_ways
+    else:
+        d_loc, do_loc = layer.h // h_ways, layer.h_out // h_ways
+    t_lo = cdiv(lo, layer.s)
+    i_hi = cdiv(d_loc + lo - layer.k + 1, layer.s)
+    t_hi = do_loc - i_hi
+    return d_loc, do_loc, lo, hi, t_lo, t_hi
+
+
+def interior_split(layer: ConvLayer, dist: Dist,
+                   mesh_shape: Mapping[str, int],
+                   overlap: bool = True) -> bool:
+    """Whether the runtime pins the §IV-A interior/boundary split for this
+    layer — i.e. core.spatial_conv issues conv_interior under an
+    optimization_barrier pin (one forward + one mirrored backward).  False
+    for CF-composed layers (channel_conv serializes its spatial halo), for
+    kernels needing no halo, without overlap, and when the boundary tiles
+    swallow the whole local output (the serialized fallback)."""
+    if not overlap:
+        return False
+    if dist.ways("C", mesh_shape) > 1 or dist.ways("F", mesh_shape) > 1:
+        return False
+    g = _conv_split_geometry(layer, dist, mesh_shape)
+    if g is None:
+        return False
+    _, do_loc, _, _, t_lo, t_hi = g
+    return t_lo + t_hi < do_loc
+
+
+def layer_collectives(m: Machine, layer: ConvLayer, dist: Dist,
+                      mesh_shape: Mapping[str, int], *,
+                      overlap: bool = True, first: bool = False,
+                      channel_chunks: int = 1) -> list[CollectiveSpec]:
+    """THE priced inventory: every collective the runtime issues for
+    `layer` under `dist`, with execution-accurate geometry derived from
+    the same distribution `layer_cost` prices — each entry tagged with the
+    cost term that charges it (or charged=False for comm the model
+    knowingly leaves unpriced).
+
+    Conventions (pinned against the traced jaxpr of the real execution
+    paths — tests/dist_checks.py `audit` group):
+
+      * halo ppermutes use SAME-padding amounts (lo, hi) = same_pads(k, s)
+        per split dim — stride-2 k=3 sends ONE message, k=1 none; H is
+        exchanged first with full local W rows, and when both H and W are
+        split the W messages carry H-extended rows (corners ride inside
+        them — the model's separate 4·SR(o²) corner term is a pricing
+        approximation of the same bytes);
+      * backward halos are the exact transposes, identical payloads;
+        `first=True` marks a first layer whose input gradient is dead
+        (loss wrt params only) — its backward halos are DCE'd away;
+      * the spatial dL/dw contraction psums once per conv application:
+        1 (serialized / no split) or 1 + (t_lo>0) + (t_hi>0) when the
+        interior/boundary split is live, each over the full replicated
+        weight shape;
+      * CF runs the cf_mode_for min-payload mode: 'channel' reduce-
+        scatters y forward / all-gathers local dy backward, 'filter'
+        all-gathers x forward / reduce-scatters full-C dx backward; the
+        weight-block psum over the non-CF processors is charged by BPa
+        only when p_ar > 1, and the slice-VJP's full-weight psum over the
+        CF axis is genuinely unpriced (charged=False — the standing
+        suspect for the mesh16cf drift);
+      * pure sample-parallel layers execute no shard_map: their dL/dw
+        allreduce is GSPMD-inserted (visibility='gspmd').
+    """
+    ws = m.wordsize
+    n_l = layer.n // max(dist.ways("N", mesh_shape), 1)
+    h_ways = dist.ways("H", mesh_shape)
+    w_ways = dist.ways("W", mesh_shape)
+    h_l = layer.h // max(h_ways, 1)
+    w_l = layer.w // max(w_ways, 1)
+    h_out_l = layer.h_out // max(h_ways, 1)
+    w_out_l = layer.w_out // max(w_ways, 1)
+    p_c = dist.ways("C", mesh_shape)
+    p_f = dist.ways("F", mesh_shape)
+    p_cf = max(p_c, p_f)
+    cf = p_cf > 1
+    spatial = h_ways > 1 or w_ways > 1
+    mode = cf_mode_for(layer, dist, mesh_shape) if cf else None
+
+    batch_axes = tuple(dist.axes("N"))
+    h_axes = tuple(dist.axes("H")) if h_ways > 1 else ()
+    w_axes = tuple(dist.axes("W")) if w_ways > 1 else ()
+    cf_axes = tuple(dist.axes("C")) if p_c > 1 else tuple(dist.axes("F"))
+    grad_axes = batch_axes + h_axes + w_axes
+
+    specs: list[CollectiveSpec] = []
+
+    # ---- spatial halo ppermutes (fwd + transposed bwd) --------------------
+    if spatial:
+        lo, hi = same_pads(layer.k, layer.s)
+        nper = (lo > 0) + (hi > 0)
+        if cf:
+            # CF x spatial: 'channel' mode halos the local C-block,
+            # 'filter' mode halos the already-gathered full-C x.
+            c_halo = layer.c // p_cf if mode == "channel" else layer.c
+        else:
+            c_halo = layer.c // max(p_c, 1)
+        halos = []
+        if nper and h_ways > 1:
+            halos.append((h_axes, n_l * (lo + hi) * w_l * c_halo * ws))
+        if nper and w_ways > 1:
+            rows = h_l + ((lo + hi) if h_ways > 1 else 0)
+            halos.append((w_axes, n_l * rows * (lo + hi) * c_halo * ws))
+        for axes, nbytes in halos:
+            specs.append(CollectiveSpec(
+                "ppermute", "halo_exchange", "fwd", nper, nbytes, axes,
+                term="fp"))
+            if not first:
+                specs.append(CollectiveSpec(
+                    "ppermute", "halo_exchange", "bwd", nper, nbytes, axes,
+                    term="bpw" if overlap else "bpx"))
+
+    if layer.kind != "conv":
+        return specs
+
+    # ---- weight-gradient psums -------------------------------------------
+    w_words = layer.k ** 2 * layer.c * layer.f
+    if cf:
+        blk_words = w_words // p_cf
+        p_total = 1
+        for _, sz in mesh_shape.items():
+            p_total *= sz
+        p_ar = p_total // max(p_c * p_f, 1)
+        # CF x spatial layers run the same interior/boundary halo split as
+        # the pure-spatial path, and the weight-block contraction psums
+        # once per conv application there too.
+        apps = 1
+        if spatial and overlap:
+            g = _conv_split_geometry(layer, dist, mesh_shape)
+            if g is not None:
+                _, do_loc, lo, hi, t_lo, t_hi = g
+                if (lo or hi) and t_lo + t_hi < do_loc:
+                    apps = 1 + (t_lo > 0) + (t_hi > 0)
+        specs.append(CollectiveSpec(
+            "psum", "conv", "bwd", apps, apps * blk_words * ws, grad_axes,
+            term="bpa", charged=p_ar > 1))
+        # slice-VJP of the weight block: the cotangent is scattered back
+        # into the full weight shape and psummed over the CF axis — comm
+        # no cost term prices.
+        specs.append(CollectiveSpec(
+            "psum", "cf_w_vjp", "bwd", 1, w_words * ws, cf_axes,
+            term="none", charged=False))
+    elif spatial:
+        g = _conv_split_geometry(layer, dist, mesh_shape)
+        apps = 1
+        if g is not None and interior_split(layer, dist, mesh_shape,
+                                            overlap):
+            _, _, _, _, t_lo, t_hi = g
+            apps = 1 + (t_lo > 0) + (t_hi > 0)
+        specs.append(CollectiveSpec(
+            "psum", "conv", "bwd", apps, apps * w_words * ws, grad_axes,
+            term="bpa"))
+    else:
+        # no shard_map at all: GSPMD inserts the data-parallel grad
+        # allreduce after partitioning — invisible to the jaxpr walk.
+        p_total = 1
+        for _, sz in mesh_shape.items():
+            p_total *= sz
+        if p_total > 1:
+            specs.append(CollectiveSpec(
+                "psum", "gspmd", "bwd", 1, w_words * ws, batch_axes,
+                term="bpa", visibility="gspmd"))
+
+    # ---- CF data collectives ---------------------------------------------
+    if cf:
+        n_blk = channel_chunks if (overlap and not spatial) else 1
+        n_blk = max(1, min(n_blk, layer.c // p_cf))
+        if mode == "channel":
+            specs.append(CollectiveSpec(
+                "reduce_scatter", "cf_reduce_scatter", "fwd", n_blk,
+                n_l * h_out_l * w_out_l * layer.f * ws, cf_axes,
+                term="fp"))
+            specs.append(CollectiveSpec(
+                "all_gather", "cf_reduce_scatter", "bwd", n_blk,
+                n_blk * n_l * h_out_l * w_out_l * (layer.f // p_cf) * ws,
+                cf_axes, term="bpw"))
+        else:
+            specs.append(CollectiveSpec(
+                "all_gather", "cf_all_gather", "fwd", 1,
+                n_l * h_l * w_l * (layer.c // p_cf) * ws, cf_axes,
+                term="fp"))
+            specs.append(CollectiveSpec(
+                "reduce_scatter", "cf_all_gather", "bwd", 1,
+                n_l * h_l * w_l * layer.c * ws, cf_axes, term="bpx"))
+    return specs
 
 
 # ---------------------------------------------------------------------------

@@ -52,7 +52,8 @@ from repro.core.channel_conv import CFSharding, chunks_decision
 from repro.core.distribution import Dist
 from repro.core.halo import pinned as halo_pinned
 from repro.core.perfmodel import (ConvLayer, EmpiricalTable, Machine,
-                                  cf_mode_for, layer_memory, network_cost,
+                                  cf_mode_for, layer_collectives,
+                                  layer_memory, network_cost,
                                   network_memory, shuffle_time)
 from repro.core.spatial_conv import ConvSharding
 from repro.core.strategy import (CapacityError, candidate_dists, solve_dag,
@@ -208,9 +209,12 @@ def _sharding_to_dist(sh, name: str = "uniform") -> Dist:
 class LayerPlan:
     name: str
     sharding: "ConvSharding | CFSharding"
-    dist: Dist | None = None      # the solved Dist (None for legacy lists)
+    dist: Dist | None = None      # the COMPILED Dist (None for legacy lists)
     reshard_in: bool = False      # §III-C shuffle on this layer's input
     note: str = ""                # e.g. geometry demotion record
+    # the pre-demotion solved Dist, recorded only when compile_plan demoted
+    # it — the plan linter re-derives whether the demotion was load-bearing
+    solved: Dist | None = None
 
 
 @dataclasses.dataclass
@@ -365,6 +369,26 @@ class NetworkPlan:
                     f"{mem['peak_layer']!r}"
                     + (f" (limit {human_bytes(lim)})" if lim else ""))
         return "\n".join(head + rows)
+
+    def audit(self, specs: Sequence[ConvLayer] | None = None, mesh=None, *,
+              cfg=None, machine: Machine | None = None,
+              overlap: bool = True, hlo: bool = False) -> list:
+        """Static verification of this plan (repro.analysis): the pure
+        plan linter always runs; with `specs`, `mesh` AND `cfg` (the
+        MeshNetConfig the plan executes) the collective auditor also
+        traces the AOT step — lowering only, no execution — and joins
+        every collective in it against the priced inventory.  Returns the
+        list of `Finding` records (render with
+        repro.analysis.format_findings; error-severity findings mean the
+        costed and executed plans disagree)."""
+        from repro import analysis
+        findings = list(analysis.lint_plan(
+            self, specs=specs, mesh_shape=_mesh_shape(mesh) or None))
+        if cfg is not None and mesh is not None and specs is not None:
+            findings += analysis.audit_meshnet(
+                self, specs, cfg, mesh, machine=machine, overlap=overlap,
+                hlo=hlo)
+        return findings
 
     def attribution_report(self, trace, *, tol: float = 5.0) -> dict:
         """Join a measured StepTrace (core.trace) against this plan's
@@ -521,10 +545,11 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
 
     compiled: dict[str, LayerPlan] = {}
     final: dict[str, Dist] = {}
+    cf_chunks: dict[str, int] = {}
     for i, spec in enumerate(specs):
         if spec.name not in dists:
             raise PlanError(f"no solved dist for layer {spec.name!r}")
-        d = normalize_dist(dists[spec.name], mesh_shape)
+        d = d_solved = normalize_dist(dists[spec.name], mesh_shape)
         sh = dist_to_sharding(d, mesh_shape, layer=spec.name)
         n_ways = d.ways("N", mesh_shape)
         if spec.n % n_ways:
@@ -565,6 +590,7 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
                     # record the calibrated chunked-CF resolution so the
                     # cost report says what the runtime will actually do
                     nblk, why = chunks_decision()
+                    cf_chunks[spec.name] = nblk
                     note = (note + "; " if note else "") + (
                         f"cf chunks={nblk} ({why})")
         if note and machine is not None and mem_limit and mesh_shape:
@@ -584,8 +610,9 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
         else:
             prev = final.get(specs[i - 1].name) if i else None
             reshard = prev is not None and not prev.same_as(d)
-        compiled[spec.name] = LayerPlan(spec.name, sh, d,
-                                        reshard_in=reshard, note=note)
+        compiled[spec.name] = LayerPlan(
+            spec.name, sh, d, reshard_in=reshard, note=note,
+            solved=None if d_solved.same_as(d) else d_solved)
         final[spec.name] = d
 
     predicted = None
@@ -614,6 +641,15 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
             predicted["shuffle_per_layer"][cs[i + 1].name] = shuffle_time(
                 machine, cs[i], final[cs[i].name], final[cs[i + 1].name],
                 mesh_shape)
+        # the priced-collective inventory (perfmodel.layer_collectives):
+        # what the static auditor (repro.analysis) joins the traced jaxpr
+        # against.  first=True: training losses grad wrt params only, so
+        # the first layer's backward input halos are dead code.
+        predicted["collectives_per_layer"] = {
+            l.name: layer_collectives(
+                machine, l, final[l.name], mesh_shape, overlap=overlap,
+                first=(i == 0), channel_chunks=cf_chunks.get(l.name, 1))
+            for i, l in enumerate(cs)}
         # memory rolls up over ALL compiled layers — a side branch's
         # weights and stashes are resident too, so branchy networks must
         # not escape the capacity validation just because the TIME report

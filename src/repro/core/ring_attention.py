@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Literal
 
 import jax
 import jax.numpy as jnp

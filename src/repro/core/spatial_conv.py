@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Mapping, Sequence
+from typing import Mapping
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import halo as halo_lib
 from repro.core import trace as trace_lib
-from repro.utils import cdiv, same_pads, shard_map
+from repro.utils import cdiv, replication_policy, same_pads, shard_map
 
 DIMNUMS = ("NHWC", "HWIO", "NHWC")
 
@@ -282,12 +282,11 @@ def spatial_conv2d(x, w, *, strides=(1, 1), sharding: ConvSharding,
                            mesh_shape=mesh_shape, overlap=overlap,
                            backend=backend)
     spec = sharding.x_spec()
-    # legacy replication tracking has no rule for pallas_call, so the
-    # Pallas local-conv path drops it (forward-verified; take gradients
-    # through the XLA backend on legacy jax — see utils.shard_map).
-    lcr = False if backend == "pallas" else None
-    return shard_map(fn, mesh=mesh, in_specs=(spec, P()),
-                     out_specs=spec, legacy_check_rep=lcr)(x, w)
+    # one repo-wide replication policy per backend (utils.replication_policy;
+    # the static auditor reports which policy each region compiled under)
+    policy = replication_policy(backend)
+    return shard_map(fn, mesh=mesh, in_specs=(spec, P()), out_specs=spec,
+                     legacy_check_rep=policy.legacy_check_rep)(x, w)
 
 
 # ---------------------------------------------------------------------------

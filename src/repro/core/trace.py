@@ -49,6 +49,22 @@ SCHEMA = "repro/step_trace@1"
 # named-region annotation
 # ---------------------------------------------------------------------------
 
+#: Canonical region names every execution path annotates with — the closed
+#: vocabulary the static collective auditor (repro.analysis.collectives)
+#: keys its jaxpr/StableHLO attribution on.  Adding a region to an
+#: execution path means adding it here, or the auditor cannot attribute
+#: its collectives to a cost term.
+REGIONS = (
+    "halo_exchange",      # spatial ppermute halos (core.halo)
+    "conv_interior",      # overlap-pinned interior conv (core.spatial_conv)
+    "conv_boundary",      # boundary strips after the halo arrives
+    "conv_serialized",    # non-overlapped halo+conv fallback
+    "cf_all_gather",      # CF filter-mode x gather (core.channel_conv)
+    "cf_reduce_scatter",  # CF channel-mode y scatter
+    "bn_collective",      # BN stats psums (core.spatial_norm)
+    "reshard",            # §III-C reshard points (core.plan)
+)
+
 _LAYER_STACK: list[str] = []
 
 

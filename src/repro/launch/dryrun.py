@@ -7,12 +7,31 @@ collective bytes parsed from the compiled HLO).
       --shape train_4k [--multi-pod] [--variant opt] [--out DIR]
 
 Writes one JSON artifact per cell to benchmarks/artifacts/dryrun/.
+
+With --audit this becomes the static-analysis lane's driver instead: no
+arch cell, no 512-device pod — the bench workloads' plans are solved
+(repro.analysis.workloads, the same registry strategy_exec times) on a
+small host mesh and each is linted + collective-audited lowering-only
+(NetworkPlan.audit: jaxpr + StableHLO vs the priced inventory).  Findings
+print as a table and land in one JSON artifact; any error-severity
+finding exits non-zero.  Not a single timed step runs.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --audit \
+      [mesh16cf mesh16_proxy ...] [--audit-out FILE]
 """
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST precede every other import (jax locks device count on first init).
+import sys
+
+# device count MUST precede every other import (jax locks it on first
+# init): the pod-scale lowering wants 512 host devices, the --audit lane
+# wants the small bench mesh (2x2, matching the CI bench lane).
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=4"
+    if "--audit" in sys.argv else
+    "--xla_force_host_platform_device_count=512")
 
 import argparse
+import dataclasses
 import json
 import re
 import time
@@ -404,15 +423,91 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
     return result
 
 
+def run_audit(workload_names, out_path: str, hlo: bool = True) -> int:
+    """--audit: lint + collective-audit the bench workloads' solved plans,
+    lowering-only.  Returns the process exit code (non-zero iff any
+    error-severity finding)."""
+    from repro import analysis
+    from repro.analysis import workloads as WL
+    from repro.core import perfmodel as pm
+    from repro.launch.mesh import make_mesh
+    from repro.utils import replication_policy
+
+    ndev = jax.device_count()
+    data = max(1, ndev // 2)
+    model = max(1, ndev // data)
+    mesh = make_mesh(data=data, model=model)
+    names = list(workload_names) or list(WL.WORKLOADS)
+    report = {
+        "schema": "repro/plan_audit@1",
+        "backend": jax.default_backend(),
+        "mesh": dict(mesh.shape),
+        # which shard_map replication policy each backend's regions
+        # compile under (the one utils.replication_policy source of truth)
+        "replication_policy": {
+            b: {**dataclasses.asdict(replication_policy(b)),
+                "legacy_check_rep": replication_policy(b).legacy_check_rep}
+            for b in ("xla", "pallas")},
+        "workloads": {},
+    }
+    n_errors = 0
+    for name in names:
+        w = WL.WORKLOADS[name]
+        if w.needs_model_axis and model <= 1:
+            print(f"# audit/{name}: SKIPPED (mesh has no model axis)")
+            report["workloads"][name] = {"skipped": True}
+            continue
+        t0 = time.time()
+        plan, specs, cfg = WL.solve_workload(name, pm.TPU_V5E, mesh)
+        findings = plan.audit(specs, mesh, cfg=cfg, overlap=True, hlo=hlo)
+        errs = analysis.error_count(findings)
+        n_errors += errs
+        print(f"# audit/{name}: {len(findings)} finding(s), {errs} "
+              f"error(s) ({time.time() - t0:.1f}s lowering-only)")
+        print(analysis.format_findings(findings))
+        report["workloads"][name] = {
+            "skipped": False,
+            "n_findings": len(findings),
+            "n_errors": errs,
+            "n_reshards": plan.n_reshards,
+            "findings": [f.to_json() for f in findings],
+        }
+    report["n_errors"] = n_errors
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"# wrote {out_path}")
+    if n_errors:
+        print(f"# AUDIT FAILED: {n_errors} error-severity finding(s) — "
+              f"costed != executed")
+    return 1 if n_errors else 0
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--shape", default="train_4k",
                     choices=list(registry.SHAPES) + ["cnn"])
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--variant", default="base")
     ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--audit", nargs="*", default=None,
+                    metavar="WORKLOAD",
+                    help="static-analysis mode: lint + collective-audit "
+                         "the named bench workload plans (all when none "
+                         "named) instead of lowering an arch cell; exits "
+                         "non-zero on any error-severity finding")
+    ap.add_argument("--audit-out",
+                    default="benchmarks/artifacts/audit/PLAN_audit.json")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="with --audit: skip the StableHLO cross-check "
+                         "pass (jaxpr-only, faster)")
     args = ap.parse_args()
+    if args.audit is not None:
+        raise SystemExit(run_audit(args.audit, args.audit_out,
+                                   hlo=not args.no_hlo))
+    if not args.arch:
+        ap.error("--arch is required (unless running --audit)")
     r = run_cell(registry.canon(args.arch), args.shape, args.multi_pod,
                  args.out, args.variant)
     rl = r["roofline_s"]

@@ -13,16 +13,12 @@ e.g. TP on heads/ffn over "model", expert sharding for MoE.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import numpy as np
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import batch_axes
-from repro.train.train_loop import fsdp_spec_for
 
 
 def fsdp_tree_specs(tree, mesh, axes=("data",)):

@@ -302,6 +302,13 @@ def main():
                          "PATH (default BENCH_step_trace.json) plus a "
                          "Chrome-trace timeline next to it, then exit — "
                          "meshnet archs (mesh1k/mesh2k) only")
+    ap.add_argument("--audit", action="store_true",
+                    help="static fail-fast gate before training: lint the "
+                         "built plan and audit its priced collectives "
+                         "against the traced step (repro.analysis, "
+                         "lowering-only — no timed work); abort when any "
+                         "error-severity finding shows costed != executed "
+                         "— meshnet archs (mesh1k/mesh2k) only")
     ap.add_argument("--debug-nans", action="store_true",
                     help="check loss/grad_norm for NaN/inf every step and "
                          "fail fast naming the first offending layer "
@@ -312,6 +319,9 @@ def main():
     cfg, params, opt, loss, mk, put, prec, extras = build(args, mesh)
     print(f"arch={cfg.name} params={human_count(tree_num_params(params))} "
           f"mesh={dict(mesh.shape)}")
+
+    if args.audit:
+        audit_gate(args, cfg, mesh, extras)
 
     if args.profile:
         profile(args, cfg, params, mk, put, mesh, extras)
@@ -412,6 +422,32 @@ def main():
     mlog.close()
     print(f"done at step {step}; final loss {losses[-1]:.4f}; "
           f"straggler stats {mon.stats}")
+
+
+def audit_gate(args, cfg, mesh, extras):
+    """--audit: prove costed == executed before spending a single step.
+
+    Lints the built plan (repro.analysis.lint_plan via NetworkPlan.audit)
+    and joins its priced collective inventory against the traced jaxpr of
+    the real train step — all lowering-only.  Any error-severity finding
+    aborts the run; warnings and infos print and training proceeds."""
+    from repro import analysis
+    if extras["layer_names"] is None:
+        raise SystemExit("--audit covers the meshnet archs (mesh1k/"
+                         "mesh2k) — the collective auditor walks "
+                         "meshnet.loss_fn")
+    t0 = time.time()
+    findings = extras["plan"].audit(extras["specs"], mesh, cfg=cfg,
+                                    overlap=True, hlo=False)
+    errs = analysis.error_count(findings)
+    print(f"plan audit: {len(findings)} finding(s), {errs} error(s) "
+          f"({time.time() - t0:.1f}s, lowering-only)")
+    print(analysis.format_findings(findings))
+    if errs:
+        raise SystemExit(
+            f"--audit: {errs} error-severity finding(s) — the plan's "
+            f"costed collectives do not match the traced step; refusing "
+            f"to train on it")
 
 
 def profile(args, cfg, params, mk, put, mesh, extras):

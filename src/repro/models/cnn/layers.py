@@ -12,8 +12,6 @@ ReLUs parallelize trivially").
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -80,7 +78,6 @@ def global_avg_pool(x, *, sharding: ConvSharding, mesh=None):
     cheaper than gathering (communication: one scalar per channel)."""
     if not sharding.is_spatial:
         return jnp.mean(x, axis=(1, 2))
-    import functools
     from jax.sharding import PartitionSpec as P
     mesh = mesh or jax.sharding.get_abstract_mesh()
     axes = sharding.spatial_axes   # flattened, incl. product-axis splits

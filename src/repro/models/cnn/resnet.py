@@ -18,7 +18,6 @@ optimizer's longest-path-first pass (paper §V-C).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -182,7 +181,6 @@ def resnet_graph(n: int, cfg: ResNetConfig = RESNET50) -> nx.DiGraph:
     g = nx.DiGraph()
     specs = layer_specs(n, cfg)
     prev = None
-    idx = 0
 
     def add(node, layer):
         g.add_node(node, layer=layer)

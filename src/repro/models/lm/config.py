@@ -10,7 +10,6 @@ otherwise).
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
 
 
 @dataclasses.dataclass(frozen=True)

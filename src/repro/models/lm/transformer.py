@@ -19,8 +19,6 @@ cache (core.decode_attention).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
 from typing import Any
 

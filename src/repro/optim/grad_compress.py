@@ -16,7 +16,6 @@ fp32 accumulation.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

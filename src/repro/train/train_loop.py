@@ -15,7 +15,6 @@ memory instead.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax

@@ -44,6 +44,42 @@ def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
                   check_rep=check_rep)
 
 
+@dataclasses.dataclass(frozen=True)
+class RepPolicy:
+    """The shard_map replication-checking policy one backend compiles
+    under, with the reason recorded — the single source call sites quote
+    instead of choosing `legacy_check_rep` ad hoc (the static-analysis
+    auditor reports which policy each region compiled under)."""
+    backend: str
+    check_rep: bool
+    reason: str
+
+    @property
+    def legacy_check_rep(self) -> bool | None:
+        """The value to pass through `shard_map(..., legacy_check_rep=)`:
+        None keeps the legacy default (tracking on); False disables it."""
+        return None if self.check_rep else False
+
+
+REP_POLICIES = {
+    "xla": RepPolicy(
+        "xla", check_rep=True,
+        reason="legacy replication tracking stays on: bodies psum/return "
+               "replicated outputs, and an untracked transpose would "
+               "over-accumulate their cotangents by the axis size"),
+    "pallas": RepPolicy(
+        "pallas", check_rep=False,
+        reason="legacy tracking cannot transpose pallas_call; the Pallas "
+               "bodies are forward-only ppermute rings with no psum, which "
+               "are gradient-safe without tracking"),
+}
+
+
+def replication_policy(backend: str) -> RepPolicy:
+    """The one shard_map check_rep policy for `backend` (default: xla)."""
+    return REP_POLICIES.get(backend, REP_POLICIES["xla"])
+
+
 def pcast_varying(x, axes):
     """`lax.pcast(..., to='varying')` under VMA-tracking jax; identity on
     pre-VMA jax, where there is no varying/invariant distinction to mark."""

@@ -3,7 +3,7 @@ process keeps a single CPU device (the 512-device env is dry-run-only).
 
 Usage:  python tests/dist_checks.py <group>
 Groups: conv | attention | ssm | models | train | compress | plan | cf |
-        spatial2d | multiaxis | memfit | overlap | trace | elastic
+        spatial2d | multiaxis | memfit | overlap | trace | elastic | audit
 Exits 0 on success; any assertion failure exits non-zero.
 """
 import os
@@ -1224,13 +1224,112 @@ def check_elastic():
             shutil.rmtree(base, ignore_errors=True)
 
 
+def check_audit():
+    """Property: EVERY executable candidate dist, over several mesh
+    factorizations and layer shapes, lowers and audits clean on the XLA
+    backend — zero unpriced collectives, zero phantom charges (no
+    error-severity finding at all).  This is the pin that keeps
+    perfmodel.layer_collectives (the priced inventory) and the runtime's
+    actual shard_map lowerings from drifting apart."""
+    from repro import analysis
+    from repro.core import perfmodel as pm
+    from repro.core import plan as plan_lib
+    from repro.core import trace as trace_lib
+    from repro.models.cnn import layers as L
+
+    shapes = [
+        pm.ConvLayer("probe", n=4, c=8, h=16, w=16, f=8),          # vanilla
+        pm.ConvLayer("probe", n=1, c=16, h=16, w=16, f=16, s=2),   # stride 2
+        pm.ConvLayer("probe", n=2, c=12, h=8, w=8, f=6, k=1),      # 1x1, c=12
+        pm.ConvLayer("probe", n=2, c=4, h=32, w=8, f=8),           # tall
+        pm.ConvLayer("probe", n=8, c=8, h=8, w=8, f=32),           # batch-rich
+        pm.ConvLayer("probe", n=1, c=32, h=4, w=4, f=32),          # CF terrain
+    ]
+    checked = 0
+    for data, model in [(2, 4), (4, 2), (1, 8), (8, 1)]:
+        mesh = make_mesh(data=data, model=model)
+        for spec in shapes:
+            for dist in plan_lib.executable_candidates(spec,
+                                                       dict(mesh.shape)):
+                plan = plan_lib.compile_plan({spec.name: dist}, [spec],
+                                             mesh)
+                sh = plan.sharding(spec.name)
+                params = {"w": jax.ShapeDtypeStruct(
+                    (spec.k, spec.k, spec.c, spec.f), jnp.float32)}
+                x = jax.ShapeDtypeStruct((spec.n, spec.h, spec.w, spec.c),
+                                         jnp.float32)
+
+                def loss(p, xx, sh=sh, spec=spec):
+                    with trace_lib.layer_context(spec.name):
+                        y = L.conv_apply(p, xx, stride=spec.s, sharding=sh,
+                                         mesh=mesh, overlap=True)
+                    return jnp.sum(y * y)
+
+                findings = analysis.audit_step_fn(
+                    jax.value_and_grad(loss, argnums=(0, 1)), (params, x),
+                    plan, [spec], mesh, overlap=True, hlo=False,
+                    grad_wrt_inputs=True)
+                bad = [f for f in findings if f.severity == "error"]
+                assert not bad, (
+                    f"mesh data={data} model={model} "
+                    f"layer={spec} dist={dist}: " +
+                    "; ".join(f"{f.rule}: {f.message}" for f in bad))
+                checked += 1
+    print(f"audit: {checked} (mesh x shape x dist) lowerings audit clean")
+
+    # --- negative direction: a broken program MUST fire the named rule ---
+    from repro.core.spatial_conv import ConvSharding
+    from repro.utils import shard_map
+    mesh = make_mesh(data=2, model=4)
+    spec = pm.ConvLayer("probe", n=4, c=8, h=16, w=16, f=8)
+    dist = plan_lib._sharding_to_dist(
+        ConvSharding(batch_axes=("data",), h_axis="model"))
+    plan = plan_lib.compile_plan({spec.name: dist}, [spec], mesh)
+    sh = plan.sharding(spec.name)
+    params = {"w": jax.ShapeDtypeStruct((3, 3, spec.c, spec.f),
+                                        jnp.float32)}
+    x = jax.ShapeDtypeStruct((spec.n, spec.h, spec.w, spec.c), jnp.float32)
+
+    # 1) inject a collective the model never priced -> unpriced-collective
+    def loss_inj(p, xx):
+        with trace_lib.layer_context(spec.name):
+            y = L.conv_apply(p, xx, stride=1, sharding=sh, mesh=mesh,
+                             overlap=True)
+            extra = shard_map(
+                lambda t: lax.psum(t, "data"), mesh=mesh,
+                in_specs=P("data", "model", None, None),
+                out_specs=P(None, "model", None, None))(xx)
+        return jnp.sum(y * y) + jnp.sum(extra) * 1e-9
+
+    found = analysis.audit_step_fn(
+        jax.value_and_grad(loss_inj, argnums=(0, 1)), (params, x), plan,
+        [spec], mesh, overlap=True, hlo=False, grad_wrt_inputs=True)
+    assert any(f.rule == "unpriced-collective" and f.severity == "error"
+               for f in found), [f"{f.rule}: {f.message}" for f in found]
+
+    # 2) strip the overlap pin (lower serialized, declare overlapped) ->
+    #    schedule-pin-missing
+    def loss_ser(p, xx):
+        with trace_lib.layer_context(spec.name):
+            y = L.conv_apply(p, xx, stride=1, sharding=sh, mesh=mesh,
+                             overlap=False)
+        return jnp.sum(y * y)
+
+    found = analysis.audit_step_fn(
+        jax.value_and_grad(loss_ser, argnums=(0, 1)), (params, x), plan,
+        [spec], mesh, overlap=True, hlo=False, grad_wrt_inputs=True)
+    assert any(f.rule == "schedule-pin-missing" and f.severity == "error"
+               for f in found), [f"{f.rule}: {f.message}" for f in found]
+    print("audit: negative cases fire the named rules")
+
+
 GROUPS = {"conv": check_conv, "attention": check_attention,
           "ssm": check_ssm, "models": check_models, "train": check_train,
           "compress": check_compress, "plan": check_plan,
           "cf": check_cf, "spatial2d": check_spatial2d,
           "multiaxis": check_multiaxis, "memfit": check_memfit,
           "overlap": check_overlap, "trace": check_trace,
-          "elastic": check_elastic}
+          "elastic": check_elastic, "audit": check_audit}
 
 if __name__ == "__main__":
     GROUPS[sys.argv[1]]()

@@ -1,0 +1,154 @@
+"""Static analysis: plan lint + collective audit (repro.analysis).
+
+The pure-lint rules run here on hand-built plans (single device — lint
+never touches a backend).  The collective auditor's property test (every
+executable candidate dist lowers and audits clean) and its negative cases
+(injected unpriced collective, stripped overlap pin) live in
+tests/dist_checks.py group 'audit' (subprocess, 8 host devices).
+"""
+import dataclasses
+import json
+
+import pytest
+
+from conftest import run_dist_group
+from repro import analysis
+from repro.core import perfmodel as pm
+from repro.core import plan as plan_lib
+from repro.core.spatial_conv import ConvSharding
+
+MESH = {"data": 2, "model": 2}
+
+
+def specs3():
+    return [pm.ConvLayer("a", n=4, c=8, h=16, w=16, f=8),
+            pm.ConvLayer("b", n=4, c=8, h=16, w=16, f=16),
+            pm.ConvLayer("c", n=4, c=16, h=16, w=16, f=8)]
+
+
+def resharding_plan(machine=pm.TPU_V5E):
+    """a: batch x H, b/c: H x W — one priced reshard into 'b'."""
+    d1 = plan_lib._sharding_to_dist(
+        ConvSharding(batch_axes=("data",), h_axis="model"))
+    d2 = plan_lib._sharding_to_dist(
+        ConvSharding(h_axis="model", w_axis="data"))
+    return plan_lib.compile_plan({"a": d1, "b": d2, "c": d2}, specs3(),
+                                 MESH, machine=machine)
+
+
+def rules(findings, severity=None):
+    return [f.rule for f in findings
+            if severity is None or f.severity == severity]
+
+
+def test_solved_plan_lints_clean():
+    plan = plan_lib.plan_line(pm.TPU_V5E, specs3(), MESH)
+    findings = analysis.lint_plan(plan, specs=specs3(), mesh_shape=MESH)
+    assert not rules(findings, "error"), [f.to_json() for f in findings]
+
+
+def test_resharding_plan_lints_clean():
+    findings = analysis.lint_plan(resharding_plan(), specs=specs3(),
+                                  mesh_shape=MESH)
+    assert not rules(findings, "error"), [f.to_json() for f in findings]
+
+
+def test_dropped_reshard_fires():
+    plan = resharding_plan()
+    assert plan.layers["b"].reshard_in
+    broken = dataclasses.replace(plan, layers={
+        **plan.layers,
+        "b": dataclasses.replace(plan.layers["b"], reshard_in=False)})
+    found = analysis.lint_plan(broken, specs=specs3(), mesh_shape=MESH)
+    assert "reshard-missing" in rules(found, "error"), \
+        [f.to_json() for f in found]
+
+
+def test_unpriced_reshard_fires():
+    plan = resharding_plan()
+    shuf = dict(plan.predicted["shuffle_per_layer"])
+    shuf["b"] = 0.0
+    broken = dataclasses.replace(
+        plan, predicted={**plan.predicted, "shuffle_per_layer": shuf})
+    found = analysis.lint_plan(broken, specs=specs3(), mesh_shape=MESH)
+    assert "reshard-unpriced" in rules(found, "error")
+
+
+def test_phantom_shuffle_fires():
+    plan = resharding_plan()
+    shuf = dict(plan.predicted["shuffle_per_layer"])
+    shuf["c"] = 1e-3      # priced a shuffle into a layer with no reshard
+    broken = dataclasses.replace(
+        plan, predicted={**plan.predicted, "shuffle_per_layer": shuf})
+    found = analysis.lint_plan(broken, specs=specs3(), mesh_shape=MESH)
+    assert "phantom-shuffle" in rules(found, "error")
+
+
+def test_memory_overrun_fires_naming_breakdown():
+    plan = resharding_plan()
+    mem = dict(plan.predicted["memory"])
+    mem["limit_bytes"] = mem["peak_bytes"] / 2
+    broken = dataclasses.replace(
+        plan, predicted={**plan.predicted, "memory": mem})
+    found = analysis.lint_plan(broken, specs=specs3(), mesh_shape=MESH)
+    hits = [f for f in found
+            if f.severity == "error" and f.rule == "memory-fit"]
+    # the finding must carry the LayerMemory.breakdown() terms, not just
+    # a bare overrun number
+    assert hits and any("weights=" in f.message and "act_in=" in f.message
+                        for f in hits), [f.to_json() for f in found]
+
+
+def test_non_load_bearing_demotion_fires():
+    plan = resharding_plan()
+    lp = plan.layers["a"]
+    # claim layer 'a' was demoted from... the dist it actually runs:
+    # a recorded demotion that changed nothing is by definition not
+    # load-bearing
+    broken = dataclasses.replace(plan, layers={
+        **plan.layers, "a": dataclasses.replace(lp, solved=lp.dist)})
+    found = analysis.lint_plan(broken, specs=specs3(), mesh_shape=MESH)
+    assert "demotion-not-load-bearing" in rules(found, "error")
+
+
+def test_divisibility_violation_fires():
+    # hand-build a plan whose dist cannot divide the layer: C=12 over a
+    # 8-way channel group does not exist among executable candidates, so
+    # force the dist in directly
+    spec = pm.ConvLayer("a", n=4, c=8, h=16, w=16, f=8)
+    plan = plan_lib.compile_plan(
+        {"a": plan_lib._sharding_to_dist(
+            ConvSharding(batch_axes=("data",), h_axis="model"))},
+        [spec], MESH)
+    found = analysis.lint_plan(
+        plan, specs=[pm.ConvLayer("a", n=3, c=8, h=16, w=16, f=8)],
+        mesh_shape=MESH)
+    assert "divisibility" in rules(found, "error")
+
+
+def test_finding_json_and_table_roundtrip():
+    f = analysis.Finding("warning", "payload-mismatch", layer="conv1_1",
+                         message="priced 10 B but moves 20 B",
+                         fix="re-derive")
+    j = f.to_json()
+    assert json.loads(json.dumps(j)) == j
+    assert j["severity"] == "warning" and j["layer"] == "conv1_1"
+    table = analysis.format_findings([f])
+    assert "payload-mismatch" in table and "conv1_1" in table
+    assert analysis.format_findings([]).strip() == "no findings"
+    assert analysis.error_count([f]) == 0
+    assert analysis.error_count(
+        [f, analysis.Finding("error", "x", message="m")]) == 1
+
+
+def test_workload_registry_covers_bench():
+    # the registry the static lane audits is the registry the bench times
+    assert set(analysis.WORKLOADS) == {
+        "mesh128", "overlap", "mesh16cf", "mesh2k_proxy", "mesh16_proxy",
+        "mesh2k_unreachable"}
+
+
+@pytest.mark.slow
+def test_dist_audit():
+    """Property + negative cases on 8 host devices (subprocess)."""
+    run_dist_group("audit")

@@ -1,7 +1,6 @@
 """Performance model (paper §V) + strategy optimizer (§V-C) tests."""
 import dataclasses
 
-import networkx as nx
 import numpy as np
 import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim
@@ -37,7 +36,6 @@ def test_layer_cost_sample_cheapest_comm():
     ch = pm.layer_cost(M, layer, hybrid(("data",), ("model",)), ms,
                        overlap=False)
     # same compute split, but hybrid adds halo time
-    comm_s = cs.total - 3 * cs.fp_compute + 0  # == bpa only
     comm_h = ch.total - ch.fp_compute - ch.bp_compute
     assert comm_h > cs.bpa * 0.99
 
@@ -137,7 +135,6 @@ def test_candidates_valid():
 @given(n_layers=st.integers(2, 5), seed=st.integers(0, 100))
 def test_line_solver_optimal(n_layers, seed):
     """DP shortest path == brute force on small strategy spaces."""
-    rng = np.random.default_rng(seed)
     ms = {"data": 2, "model": 2}
     layers = [pm.ConvLayer(f"l{i}", n=4, c=8, h=32, w=32, f=8, k=3, s=1)
               for i in range(n_layers)]
