@@ -1,55 +1,76 @@
-"""Reproduce the §Perf hillclimb: run baseline vs optimized variants for
-the three chosen cells and print the before/after roofline comparison.
+"""Strategy-search baselines head-to-head on the §V cost model: greedy
+(narrow candidates, the longest-path-first default), exact DP over the
+WIDE candidate set (what `--search beam` resolves to on a layer line),
+and stochastic hill-climbing restarts over the same wide set.
 
-  PYTHONPATH=src python -m benchmarks.hillclimb          # ~10 min on CPU
+  PYTHONPATH=src python -m benchmarks.hillclimb
+
+Model-only — no live devices, no measurement: the point is ordering.
+The wide candidate set is a strict superset of the narrow one, so on a
+line (where the DP is exact) wide-DP <= greedy must hold identically;
+hillclimb is the sanity bound from below — a stochastic search over the
+same space may tie the DP but never beat it.  A violation of either
+inequality is a solver bug, and `derived` makes it visible per cell.
+
+CSV: name,us_per_call,derived — us_per_call is the found plan's predicted
+step cost; derived carries the cost ratios vs greedy and vs the wide DP.
 """
 from __future__ import annotations
 
-import json
-import os
-import subprocess
-import sys
-
-CELLS = [  # (arch, shape, optimized variant)
-    ("gemma2-9b", "train_4k", "opt"),
-    ("seamless-m4t-large-v2", "train_4k", "opt"),
-    ("olmoe-1b-7b", "train_4k", "vpz"),
-]
-OUT = "benchmarks/artifacts/dryrun"
+MESHES = {"2x2": {"data": 2, "model": 2}, "4x4": {"data": 4, "model": 4}}
 
 
-def run(arch, shape, variant):
-    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
-           "--shape", shape, "--out", OUT]
-    if variant != "base":
-        cmd += ["--variant", variant]
-    env = dict(os.environ, PYTHONPATH="src")
-    subprocess.run(cmd, check=True, env=env, capture_output=True, text=True)
+def _solve_all(m, specs, mesh_shape, table=None):
+    """(greedy, wide_dp, hillclimb) predicted costs for one workload.
+    greedy is None when the narrow candidate set leaves some layer with
+    NO valid assignment (every mesh axis must land on a dim that divides)
+    — the infeasibility the wide set's partial-replication target fixes,
+    which is worth a row of its own, not a crash."""
+    from repro.core import strategy as st
+    narrow = [st.candidate_dists(l, mesh_shape, allow_channel_filter=True)
+              for l in specs]
+    wide = [st.candidate_dists(l, mesh_shape, allow_channel_filter=True,
+                               wide=True) for l in specs]
+    greedy = st.solve_line(m, specs, narrow, mesh_shape, table=table).cost \
+        if all(narrow) else None
+    dp = st.solve_line(m, specs, wide, mesh_shape, table=table)
+    hc = st.solve_hillclimb(m, specs, wide, mesh_shape, table=table)
+    return greedy, dp.cost, hc.cost
 
 
-def load(arch, shape, variant):
-    tag = f"{arch.replace('-', '_').replace('.', '_')}-{shape}-pod1"
-    if variant != "base":
-        tag += f"-{variant}"
-    with open(os.path.join(OUT, tag + ".json")) as f:
-        return json.load(f)
+def run(csv=True):
+    from repro.analysis.workloads import CFG16, CFG16P
+    from repro.core import perfmodel as pm
+    from repro.models.cnn import meshnet
 
-
-def main():
-    print("cell,variant,peak_GiB,compute_ms,memory_ms,collective_ms,dominant")
-    for arch, shape, var in CELLS:
-        for v in ("base", var):
-            try:
-                d = load(arch, shape, v)
-            except FileNotFoundError:
-                run(arch, shape, v)
-                d = load(arch, shape, v)
-            r = d["roofline_s"]
-            print(f"{arch}/{shape},{v},"
-                  f"{d['per_device']['peak_bytes']/2**30:.2f},"
-                  f"{r['compute']*1e3:.1f},{r['memory']*1e3:.1f},"
-                  f"{r['collective']*1e3:.1f},{d['dominant']}")
+    m = pm.TPU_V5E
+    rows = []
+    for wl, cfg, batch in (("mesh16cf", CFG16, 2),
+                           ("mesh16_proxy", CFG16P, 1)):
+        specs = meshnet.layer_specs(cfg, batch)
+        for mname, mesh_shape in MESHES.items():
+            greedy, dp, hc = _solve_all(m, specs, mesh_shape)
+            if greedy is None:
+                rows.append((f"hillclimb/{wl}/{mname}/greedy", 0.0,
+                             "UNSOLVABLE: a layer has no narrow candidate"
+                             " (the wide set's R target fixes this)"))
+                vs_g_dp = vs_g_hc = "vs_greedy=n/a"
+            else:
+                rows.append((f"hillclimb/{wl}/{mname}/greedy",
+                             greedy * 1e6,
+                             "baseline (narrow candidates, DP)"))
+                vs_g_dp = f"vs_greedy={dp / greedy:.3f}"
+                vs_g_hc = f"vs_greedy={hc / greedy:.3f}"
+            rows.append((f"hillclimb/{wl}/{mname}/wide_dp", dp * 1e6,
+                         f"{vs_g_dp} (must be <= 1: superset space)"))
+            rows.append((f"hillclimb/{wl}/{mname}/hillclimb", hc * 1e6,
+                         f"{vs_g_hc} vs_wide_dp={hc / dp:.3f} "
+                         f"(must be >= 1: DP is exact)"))
+    if csv:
+        for n_, v, d_ in rows:
+            print(f"{n_},{v:.1f},{d_}")
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    run()

@@ -7,8 +7,8 @@ roofline summary.  Prints ``name,us_per_call,derived`` CSV.
 
 def main() -> None:
     from benchmarks import (fig2_resnet_layers, fig3_mesh_layers,
-                            kernels_micro, table1_mesh1k, table2_mesh2k,
-                            table3_resnet50)
+                            hillclimb, kernels_micro, table1_mesh1k,
+                            table2_mesh2k, table3_resnet50)
     print("name,us_per_call,derived")
     table1_mesh1k.run()
     table2_mesh2k.run()
@@ -16,6 +16,7 @@ def main() -> None:
     fig2_resnet_layers.run()
     fig3_mesh_layers.run()
     kernels_micro.run()
+    hillclimb.run()
     # roofline summary from dry-run artifacts (if present)
     try:
         from benchmarks import roofline

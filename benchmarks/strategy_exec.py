@@ -4,7 +4,19 @@ against the §V perf model — the validation loop the paper closes with
 
   PYTHONPATH=src python -m benchmarks.strategy_exec [ndevices] \
       [--out BENCH_strategy.json] [--calibration BENCH_calibration.json] \
-      [--gate] [--gate-tol 0.10] [--reps N] [--attribute] [--audit]
+      [--gate] [--gate-tol 0.10] [--reps N] [--attribute] [--audit] \
+      [--search beam:4] [--ratio-tol 10] [--ratio-warn-only]
+
+Three gates ride on the measurements: the ordering promise (solved auto
+plans measure no slower than their uniform baselines), the widened-search
+promise (the wide-candidate beam/hillclimb plan measures no slower than
+the greedy solve on at least one workload), and the model-fidelity gate
+(the composed-calibrated model/measured ratio on mesh16cf/mesh16_proxy
+stays within --ratio-tol of 1.0; the same plans are also re-priced
+through the factor-free analytic view so BENCH_strategy.json records
+whether composition calibration tightened the ratio).  With --attribute,
+per-term drift additionally feeds calibrate.refit_from_attribution so
+the next run's factors absorb the measured drift.
 
 Runs on `ndevices` host CPU devices (default 4, set before jax import).
 First the §V cost inputs are calibrated on the live backend
@@ -84,6 +96,7 @@ if __name__ == "__main__":
 import argparse  # noqa: E402
 import dataclasses  # noqa: E402
 import json  # noqa: E402
+import math  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -145,6 +158,40 @@ def _measure_plans(cfg, batch, specs, plans, mesh, reps, rounds=4):
             steps[tag] = functools.partial(compiled, params, bb)
         samples = interleaved_samples(steps, reps=reps, rounds=rounds)
         return {t: min(s) for t, s in samples.items()}, peaks, samples
+
+
+def _analytic_view(machine, table):
+    """The pre-composition cost model: the composition calibration factors
+    reset to 1.0 and the shuffle:/composed: key families dropped from the
+    table.  The local-conv entries stay — both views share them (they
+    predate the composed calibration; the A/B isolates what composition
+    calibration bought, not what conv timing bought)."""
+    from repro.core.perfmodel import EmpiricalTable
+    m = dataclasses.replace(machine, composed_cf_factor=1.0,
+                            composed_halo_factor=1.0, shuffle_factor=1.0)
+    t = EmpiricalTable({k: v for k, v in table.entries.items()
+                        if not str(k[0]).startswith(("shuffle", "composed"))})
+    return m, t
+
+
+def _ratio_views(plan_lib, plan, specs, mesh, machine, table, measured_s):
+    """Re-price the SAME measured plan through the analytic (factor-free,
+    shuffle-table-free) view and report both model/measured ratios.  The
+    `calibration_improves` bit is the tentpole's win condition: the
+    composed-calibrated prediction must sit closer to the measurement
+    (in log distance — over- and under-prediction count alike)."""
+    m_a, t_a = _analytic_view(machine, table)
+    pred_ana = plan_lib.compile_plan(
+        {n: lp.dist for n, lp in plan.layers.items()}, specs, mesh,
+        machine=m_a, table=t_a).predicted["total"]
+    pred_cal = plan.predicted["total"]
+    r_cal = float(pred_cal / measured_s)
+    r_ana = float(pred_ana / measured_s)
+    return {"ratio_calibrated": r_cal, "ratio_analytic": r_ana,
+            "analytic_predicted_s": float(pred_ana),
+            "calibrated_predicted_s": float(pred_cal),
+            "calibration_improves":
+                bool(abs(math.log(r_cal)) <= abs(math.log(r_ana)))}
 
 
 def _solver_agreement(plan_lib, machine, table, specs, mesh, **kw):
@@ -253,13 +300,15 @@ def _bench_ckpt_overhead(cfg, batch, specs, plan, mesh, reps, rounds, tol):
             "ok": asy / no <= 1 + tol}
 
 
-def _attribute(targets, mesh, out_path, reps, rounds) -> bool:
+def _attribute(targets, mesh, out_path, reps, rounds):
     """--attribute: decompose each target's model-vs-measured gap into
     named per-term drift.  Runs the segmented per-layer profiler
     (core.trace.trace_plan) on the solved plan and joins it against the
     perf-model prediction (plan.attribution_report); the JSON written to
     `out_path` names the worst-drifting cost term per workload.  Returns
-    whether any term drifted beyond 5x (warn-only — printed, not gated)."""
+    (warned, {workload: attribution report}) — warned is whether any term
+    drifted beyond 5x (warn-only — printed, not gated); the reports feed
+    calibrate.refit_from_attribution so the drift drives recalibration."""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core.trace import format_attribution, trace_plan
     from repro.data.pipeline import synthetic_mesh_batch
@@ -294,7 +343,8 @@ def _attribute(targets, mesh, out_path, reps, rounds) -> bool:
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1, sort_keys=True)
     print(f"# wrote {out_path}")
-    return warned
+    return warned, {n: w["attribution"]
+                    for n, w in report["workloads"].items()}
 
 
 def run(args) -> int:
@@ -419,18 +469,25 @@ def run(args) -> int:
     n_cf = sum(isinstance(lp.sharding, CFSharding)
                for lp in auto_cf.layers.values())
     print(f"# mesh16cf auto plan: {n_cf} CF layers")
+    wide16 = plan_lib.plan_line(machine, specs16, mesh, table=table,
+                                search=args.search)
     workloads["mesh16cf"] = _bench_workload(
         "mesh16cf", cfg16, 2, specs16,
         (("uniform", _uniform_plan(plan_lib, uni_sh, names, specs16, mesh,
                                    machine, table)),
          ("auto_cf", auto_cf),
+         ("auto_wide", wide16),
          ("auto_nocf", plan_lib.plan_line(machine, specs16, mesh,
                                           table=table,
                                           allow_channel_filter=False))),
         mesh, args.reps, args.rounds, "uniform", "auto_cf", agree)
     workloads["mesh16cf"]["n_cf_layers"] = n_cf
+    workloads["mesh16cf"]["ratio_views"] = _ratio_views(
+        plan_lib, auto_cf, specs16, mesh, machine, table,
+        workloads["mesh16cf"]["entries"]["auto_cf"]["measured_s"])
     attr_targets["mesh16cf"] = (cfg16, 2, specs16, auto_cf)
     audit_targets["mesh16cf"] = (auto_cf, specs16, cfg16)
+    audit_targets["mesh16cf_wide"] = (wide16, specs16, cfg16)
 
     # --- mesh2k_proxy: the 2K model's depth (5 convs/block) at reduced
     # resolution, under the 2-D H x W decomposition (W on the data axis,
@@ -466,16 +523,23 @@ def run(args) -> int:
                       for lp in auto.layers.values())
         print(f"# mesh16_proxy auto plan: {n_cfsp} CF x spatial layers, "
               f"{n_multi} product-axis spatial layers")
+        wide16p = plan_lib.plan_line(machine, specs16p, mesh, table=table,
+                                     search=args.search)
         workloads["mesh16_proxy"] = _bench_workload(
             "mesh16_proxy", cfg16p, 1, specs16p,
             (("uniform", _uniform_plan(plan_lib, hw_sh, names, specs16p,
                                        mesh, machine, table)),
-             ("auto", auto)),
+             ("auto", auto),
+             ("auto_wide", wide16p)),
             mesh, args.reps, args.rounds, "uniform", "auto", agree)
         workloads["mesh16_proxy"]["n_cf_spatial_layers"] = n_cfsp
         workloads["mesh16_proxy"]["n_product_axis_layers"] = n_multi
+        workloads["mesh16_proxy"]["ratio_views"] = _ratio_views(
+            plan_lib, auto, specs16p, mesh, machine, table,
+            workloads["mesh16_proxy"]["entries"]["auto"]["measured_s"])
         attr_targets["mesh16_proxy"] = (cfg16p, 1, specs16p, auto)
         audit_targets["mesh16_proxy"] = (auto, specs16p, cfg16p)
+        audit_targets["mesh16_proxy_wide"] = (wide16p, specs16p, cfg16p)
 
     # --- mesh2k_unreachable: the paper's Table-2 memory story as an
     # executable benchmark.  Batch 1: sample parallelism cannot reduce
@@ -548,9 +612,15 @@ def run(args) -> int:
             errs = analysis.error_count(findings)
             print(f"# audit/{name}: {len(findings)} finding(s), "
                   f"{errs} error(s)")
-            workloads[name]["audit"] = {
-                "n_findings": len(findings), "n_errors": errs,
-                "findings": [f.to_json() for f in findings]}
+            rec = {"n_findings": len(findings), "n_errors": errs,
+                   "findings": [f.to_json() for f in findings]}
+            if name in workloads:
+                workloads[name]["audit"] = rec
+            else:
+                # widened-search plans audit under their parent workload
+                # ("mesh16cf_wide" -> mesh16cf["audit_wide"]) — the
+                # widened solver must stay as auditable as the greedy one
+                workloads[name.rsplit("_wide", 1)[0]]["audit_wide"] = rec
 
     # --- the gate: the optimizer's ordering promise ----------------------
     tol = args.gate_tol
@@ -571,6 +641,83 @@ def run(args) -> int:
             f"{ckpt_overhead['overhead_ratio']:.2f}x "
             f"(> {1 + args.ckpt_tol:.2f}x) — checkpoint stall on the "
             f"critical path")
+
+    # --- the widened-search promise: the wider candidate space + global
+    # search must MEASURE no slower than greedy somewhere (the wide set is
+    # a superset of the narrow one, so the predicted cost can only drop;
+    # this gate checks the measurement backs the prediction on at least
+    # one workload — gated like the ordering promise, same tolerance) ----
+    search_cmp = {}
+    for name, wl in workloads.items():
+        e = wl["entries"]
+        if "auto_wide" not in e:
+            continue
+        greedy_tag = wl["auto"]
+        r = e["auto_wide"]["measured_s"] / e[greedy_tag]["measured_s"]
+        search_cmp[name] = {
+            "mode": args.search,
+            "greedy_measured_s": e[greedy_tag]["measured_s"],
+            "wide_measured_s": e["auto_wide"]["measured_s"],
+            "greedy_predicted_s": e[greedy_tag]["predicted_s"],
+            "wide_predicted_s": e["auto_wide"]["predicted_s"],
+            "wide_vs_greedy_measured": r,
+        }
+        wl["search"] = search_cmp[name]
+        print(f"# search/{name}: wide({args.search})/greedy measured "
+              f"{r:.3f}, predicted "
+              f"{e['auto_wide']['predicted_s']*1e6:.1f}us vs "
+              f"{e[greedy_tag]['predicted_s']*1e6:.1f}us")
+    if search_cmp:
+        best = min(s["wide_vs_greedy_measured"] for s in search_cmp.values())
+        if best > 1 + tol:
+            failures.append(
+                f"search: widened search ({args.search}) measured slower "
+                f"than greedy on every workload (best wide/greedy "
+                f"{best:.3f} > {1 + tol:.2f}) — the wider strategy space "
+                f"must pay somewhere")
+
+    # --- the model-fidelity gate: the composed calibration's headline ----
+    # (ISSUE win condition: the calibrated model/measured ratio on the
+    # composition-heavy workloads must sit within --ratio-tol of 1.0,
+    # either side; --ratio-warn-only downgrades a miss to a warning so
+    # the first CI run records the baseline before the gate flips on)
+    ratio_gate = {"tolerance": args.ratio_tol,
+                  "warn_only": bool(args.ratio_warn_only), "checks": {}}
+    for name in ("mesh16cf", "mesh16_proxy"):
+        rv = workloads.get(name, {}).get("ratio_views")
+        if not rv:
+            continue
+        r = rv["ratio_calibrated"]
+        off = float(max(r, 1 / r)) if r > 0 else float("inf")
+        ok = bool(off <= args.ratio_tol)
+        ratio_gate["checks"][name] = dict(rv, off_by=off, ok=ok)
+        print(f"# ratio/{name}: calibrated {r:.3f} "
+              f"(off {off:.2f}x, tol {args.ratio_tol:.1f}x), analytic "
+              f"{rv['ratio_analytic']:.3f}, "
+              f"calibration_improves={rv['calibration_improves']}")
+        if not ok:
+            msg = (f"ratio: {name} calibrated model/measured {r:.3f} is "
+                   f"off by {off:.2f}x > --ratio-tol "
+                   f"{args.ratio_tol:.1f}x")
+            if args.ratio_warn_only:
+                print(f"# RATIO WARNING (warn-only): {msg}")
+            else:
+                failures.append(msg)
+
+    # --- --attribute + refit: measured drift drives recalibration --------
+    # (before the report write so the refit outcome rides along in it)
+    attribution_refit = {}
+    if args.attribute:
+        _, attr_reps = _attribute(attr_targets, mesh, args.attribution_out,
+                                  args.reps, args.rounds)
+        for name, rep in attr_reps.items():
+            changed = calib.refit_from_attribution(
+                cal, rep, path=args.calibration, damp=0.5)
+            if changed:
+                attribution_refit[name] = changed
+                print(f"# refit/{name}: " + ", ".join(
+                    f"{k}={v:.3f}" for k, v in sorted(changed.items())))
+
     report = {
         "schema": SCHEMA,
         "backend": jax.default_backend(),
@@ -583,15 +730,15 @@ def run(args) -> int:
                         "table_entries": len(table)},
         "workloads": workloads,
         "ckpt_overhead": ckpt_overhead,
+        "search": search_cmp,
+        "ratio_gate": ratio_gate,
+        "attribution_refit": attribution_refit,
         "gate": {"enabled": bool(args.gate), "tolerance": tol,
                  "ok": not failures, "failures": failures},
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1, sort_keys=True)
     print(f"# wrote {args.out}")
-    if args.attribute:
-        _attribute(attr_targets, mesh, args.attribution_out,
-                   args.reps, args.rounds)
     for name, wl in workloads.items():
         print(f"# {name}: auto/uniform measured "
               f"{wl['auto_vs_uniform_measured']:.3f}, solver agreement "
@@ -638,13 +785,35 @@ def main(argv=None) -> int:
                          "per-term drift and write --attribution-out; "
                          "drift beyond 5x warns without failing")
     ap.add_argument("--attribution-out", default="BENCH_attribution.json")
+    ap.add_argument("--search", default="beam:4",
+                    metavar="beam[:N]|hillclimb|greedy",
+                    help="search mode for the widened-search arm "
+                         "(auto_wide) on mesh16cf/mesh16_proxy: wide "
+                         "candidate set + this solver, A/B'd against the "
+                         "greedy longest-path-first solve and gated like "
+                         "the ordering promise")
+    ap.add_argument("--ratio-tol", type=float, default=10.0,
+                    help="model-fidelity gate: fail when the calibrated "
+                         "model/measured ratio on mesh16cf/mesh16_proxy "
+                         "is off from 1.0 by more than this factor "
+                         "(either side)")
+    ap.add_argument("--ratio-warn-only", action="store_true",
+                    help="downgrade --ratio-tol misses to warnings (for "
+                         "the first CI run that records the baseline "
+                         "before the gate flips on)")
     ap.add_argument("--audit", action="store_true",
                     help="run the static collective auditor "
                          "(repro.analysis) on every measured auto plan "
                          "and record the findings per workload in the "
                          "report JSON — lowering-only, never gates here "
                          "(the CI static lane gates)")
-    return run(ap.parse_args(argv))
+    args = ap.parse_args(argv)
+    from repro.core.strategy import parse_search
+    try:
+        parse_search(args.search)
+    except ValueError as e:
+        ap.error(str(e))
+    return run(args)
 
 
 if __name__ == "__main__":

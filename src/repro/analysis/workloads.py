@@ -52,14 +52,16 @@ WORKLOADS = {
 
 
 def solve_workload(name: str, machine, mesh, *, table=None,
-                   overlap: bool = True):
+                   overlap: bool = True, search: str = "greedy"):
     """Solve one bench workload's plan exactly the way the bench does.
 
     Returns (plan, specs, cfg).  `auto` is the §V-C plan_line solve;
     `uniform_h` is the overlap workload's uniform H-split plan compiled
     through the same cost model; `memfit` derives the synthetic capacity
     limit from the replicated plan's predicted peak (x0.5) and re-solves
-    memory-aware — the §VI Table-2 story.
+    memory-aware — the §VI Table-2 story.  `search` selects the solver's
+    search mode (greedy | beam[:N] | hillclimb, strategy.parse_search) for
+    the solved recipes; the uniform baseline ignores it.
     """
     from repro.core import plan as plan_lib
     from repro.core.spatial_conv import ConvSharding
@@ -78,8 +80,9 @@ def solve_workload(name: str, machine, mesh, *, table=None,
             specs, mesh, machine=machine, table=table, overlap=overlap)
         limit = 0.5 * rep.predicted["memory"]["peak_bytes"]
         plan = plan_lib.plan_line(machine, specs, mesh, table=table,
-                                  overlap=overlap, mem_limit=limit)
+                                  overlap=overlap, mem_limit=limit,
+                                  search=search)
     else:
         plan = plan_lib.plan_line(machine, specs, mesh, table=table,
-                                  overlap=overlap)
+                                  overlap=overlap, search=search)
     return plan, specs, w.cfg

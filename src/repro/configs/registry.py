@@ -15,6 +15,13 @@ ARCHS = [
 ]
 CNN_ARCHS = ["resnet50", "mesh1k", "mesh2k"]
 
+# the archs the §V-C strategy optimizer can solve (--strategy auto,
+# calibrate, --mem-limit): the CNN family whose layer DAGs have a candidate
+# distribution space.  The LM seed configs above stay loadable/trainable
+# under the uniform sharding but are quarantined out of every solver
+# entrypoint — launch.train errors (not warns) on `--strategy auto` + LM.
+SOLVABLE_ARCHS = list(CNN_ARCHS)
+
 _ALIASES = {a.replace("_", "-"): a for a in ARCHS + CNN_ARCHS}
 _ALIASES.update({
     "gemma2-9b": "gemma2_9b", "qwen2.5-14b": "qwen2_5_14b",

@@ -45,8 +45,10 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import channel_conv
-from repro.core.perfmodel import (LAUNCH_OVERHEAD, ConvLayer,
-                                  EmpiricalTable, Machine)
+from repro.core.perfmodel import (LAUNCH_OVERHEAD, SHUFFLE_KIND, ConvLayer,
+                                  EmpiricalTable, Machine, _halo_time,
+                                  all_to_all_time, reduce_scatter_time,
+                                  shuffle_block_bytes)
 from repro.core.plan import executable_candidates
 from repro.utils import same_pads, shard_map, time_fn
 
@@ -67,34 +69,67 @@ HOST_BASE = Machine("host-base", peak_flops=1e11, mem_bw=20e9,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def detect_mem_capacity(default: float = 8 << 30) -> float:
-    """Per-device memory capacity in bytes, for Machine.mem_capacity and
-    `--mem-limit auto`.
+def _detect_mem_capacity(default: float = 8 << 30) -> tuple[float, str]:
+    """(bytes, source) behind detect_mem_capacity / mem_capacity_source.
 
-    Accelerators report it directly: ``jax.local_devices()[0]
-    .memory_stats()['bytes_limit']``.  The host CPU backend returns None
-    from memory_stats, so the documented fallback divides /proc/meminfo
-    MemAvailable among the (possibly xla_force_host_platform forced)
-    device count — all host 'devices' share one RAM, so the per-device
-    share is the honest capacity.  `default` when neither source exists.
+    Source precedence: the REPRO_MEM_CAPACITY env var (deterministic CI /
+    non-Linux override, plain bytes), the live device's memory_stats
+    bytes_limit, the /proc/meminfo MemAvailable share, then `default`.
     Memoized: MemAvailable jitters call-to-call, and a calibration must
     stay deterministic within a process.
     """
+    env = os.environ.get("REPRO_MEM_CAPACITY")
+    if env:
+        try:
+            cap = float(env)
+            if cap > 0:
+                return cap, "env:REPRO_MEM_CAPACITY"
+        except ValueError:
+            print(f"calibrate: WARNING: ignoring non-numeric "
+                  f"REPRO_MEM_CAPACITY={env!r}")
     try:
         stats = jax.local_devices()[0].memory_stats()
     except Exception:
         stats = None
     if stats and stats.get("bytes_limit"):
-        return float(stats["bytes_limit"])
+        return float(stats["bytes_limit"]), "device:memory_stats"
     try:
         with open("/proc/meminfo") as f:
             for line in f:
                 if line.startswith("MemAvailable:"):
                     kb = float(line.split()[1])
-                    return kb * 1024 / max(jax.local_device_count(), 1)
+                    return (kb * 1024 / max(jax.local_device_count(), 1),
+                            "host:/proc/meminfo")
     except (OSError, ValueError, IndexError):
         pass
-    return float(default)
+    return float(default), "default"
+
+
+def detect_mem_capacity(default: float = 8 << 30) -> float:
+    """Per-device memory capacity in bytes, for Machine.mem_capacity and
+    `--mem-limit auto`.
+
+    A REPRO_MEM_CAPACITY env var (plain bytes) wins outright — the
+    deterministic-capacity knob for CI and non-Linux hosts.  Otherwise
+    accelerators report it directly (``jax.local_devices()[0]
+    .memory_stats()['bytes_limit']``); the host CPU backend returns None
+    from memory_stats, so the documented fallback divides /proc/meminfo
+    MemAvailable among the (possibly xla_force_host_platform forced)
+    device count — all host 'devices' share one RAM, so the per-device
+    share is the honest capacity.  `default` when no source exists.
+    `mem_capacity_source()` names which source answered (recorded in
+    Calibration.meta)."""
+    return _detect_mem_capacity(default)[0]
+
+
+def mem_capacity_source(default: float = 8 << 30) -> str:
+    """Which source detect_mem_capacity's answer came from."""
+    return _detect_mem_capacity(default)[1]
+
+
+# tests (and long-lived processes changing REPRO_MEM_CAPACITY) reset the
+# memoized detection through the same knob the old lru_cached function had
+detect_mem_capacity.cache_clear = _detect_mem_capacity.cache_clear
 
 
 def compiled_peak_bytes(compiled) -> float:
@@ -386,6 +421,199 @@ def fit_eta(mesh, *, timer: Timer | None = None, reps: int = 5,
 
 
 # ---------------------------------------------------------------------------
+# composition microbenchmarks: what a §III-C shuffle, a product-axis halo
+# and a CF collective *inside* a halo'd spatial block actually cost — the
+# terms where the composed workloads' 4–13× model/measured gap lives
+# ---------------------------------------------------------------------------
+
+def shuffle_sizes(specs: Sequence[ConvLayer],
+                  mesh_shape: Mapping[str, int],
+                  wordsize: int = 4) -> list[tuple[int, int]]:
+    """The (p_total, local_bytes) shuffle keys a plan transition over these
+    layers can price — shuffle_block_bytes is the shared definition, so the
+    measured `shuffle:` entries land on exactly the keys shuffle_time asks
+    for."""
+    p_total = 1
+    for sz in mesh_shape.values():
+        p_total *= sz
+    out = set()
+    for layer in specs:
+        nb = shuffle_block_bytes(layer, p_total, wordsize)
+        if nb > 0:
+            out.add((p_total, nb))
+    return sorted(out)
+
+
+def _bench_shuffle(mesh, axes: Sequence[str], nbytes: int,
+                   timer: Timer) -> float:
+    """One direction of a §III-C shuffle: reshard a (p, elems) array from
+    row-sharded to column-sharded over the product of `axes` — the
+    all-to-all transpose every dist change pays, at `nbytes` local."""
+    shape = dict(mesh.shape)
+    p = 1
+    for ax in axes:
+        p *= shape[ax]
+    elems = max(p, nbytes // 4) // p * p
+    src = NamedSharding(mesh, P(tuple(axes), None))
+    dst = NamedSharding(mesh, P(None, tuple(axes)))
+    x = jax.device_put(jnp.zeros((p, elems), jnp.float32), src)
+    fn = jax.jit(lambda v: lax.with_sharding_constraint(v, dst))
+    return timer(fn, x)
+
+
+def _bench_product_halo(mesh, axes: tuple[str, str], timer: Timer,
+                        n: int = 2, c: int = 8, f: int = 8,
+                        k: int = 3) -> dict:
+    """Serialized H-split conv with H over a *product* of two mesh axes
+    (boundary-crossing hops), plus the local conv at the shard shape as the
+    compute-only anchor — (t_fused − t_compute) isolates the measured halo
+    exchange the model prices with sr_time(…, hops=2)."""
+    from repro.core.spatial_conv import ConvSharding, spatial_conv2d
+    shape = dict(mesh.shape)
+    p = shape[axes[0]] * shape[axes[1]]
+    h_l = max(4 * k, 16)
+    h, w = h_l * p, 32
+    sh = ConvSharding(h_axis=tuple(axes))
+    x = jax.device_put(
+        jax.random.normal(jax.random.PRNGKey(0), (n, h, w, c), jnp.float32),
+        NamedSharding(mesh, sh.x_spec()))
+    wt = jax.random.normal(jax.random.PRNGKey(1), (k, k, c, f),
+                           jnp.float32) * 0.1
+    ser_fn = jax.jit(lambda x, w: spatial_conv2d(
+        x, w, strides=(1, 1), sharding=sh, mesh=mesh, overlap=False))
+    x_loc = jax.random.normal(jax.random.PRNGKey(2), (n, h_l, w, c),
+                              jnp.float32)
+    loc_fn = jax.jit(lambda x, w: lax.conv_general_dilated(
+        x, w, (1, 1), (same_pads(k, 1), same_pads(k, 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC")))
+    return {"axes": list(axes), "p": p,
+            "t_fused": timer(ser_fn, x, wt),
+            "t_compute": timer(loc_fn, x_loc, wt),
+            "geom": {"o": k // 2, "n": n, "c": c, "h_l": h_l, "w_l": w,
+                     "hops": 2}}
+
+
+def _bench_composed_cf(mesh, cf_axis: str, sp_axis: str, timer: Timer,
+                       n: int = 2, k: int = 3) -> dict:
+    """Serialized fused CF×spatial conv (the §III-D reduce-scatter running
+    *inside* an H-split shard_map) plus its local-conv anchor — what the CF
+    collective costs when composed with a halo'd spatial block, vs the
+    standalone collective fit."""
+    from repro.core.channel_conv import CFSharding, cf_conv2d
+    shape = dict(mesh.shape)
+    p_cf, p_sp = shape[cf_axis], shape[sp_axis]
+    c = f = 8 * p_cf
+    h_l = max(4 * k, 16)
+    h, w = h_l * p_sp, 32
+    sh = CFSharding(cf_axis=cf_axis, h_axis=sp_axis, mode="channel")
+    x = jax.device_put(
+        jax.random.normal(jax.random.PRNGKey(0), (n, h, w, c), jnp.float32),
+        NamedSharding(mesh, sh.x_spec()))
+    wt = jax.random.normal(jax.random.PRNGKey(1), (k, k, c, f),
+                           jnp.float32) * 0.1
+    fused_fn = jax.jit(lambda x, w: cf_conv2d(
+        x, w, strides=(1, 1), sharding=sh, mesh=mesh, overlap=False))
+    # channel mode computes (c_l -> full F) locally, then RS(y) completes
+    # the channel sum — the anchor is that local conv at the shard shape
+    x_loc = jax.random.normal(jax.random.PRNGKey(2), (n, h_l, w, c // p_cf),
+                              jnp.float32)
+    wt_loc = wt[:, :, : c // p_cf, :]
+    loc_fn = jax.jit(lambda x, w: lax.conv_general_dilated(
+        x, w, (1, 1), (same_pads(k, 1), same_pads(k, 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC")))
+    return {"cf_axis": cf_axis, "sp_axis": sp_axis,
+            "p_cf": p_cf, "p_sp": p_sp,
+            "t_fused": timer(fused_fn, x, wt),
+            "t_compute": timer(loc_fn, x_loc, wt_loc),
+            "geom": {"o": k // 2, "n": n, "c_l": c // p_cf, "f": f,
+                     "h_l": h_l, "w_l": w}}
+
+
+def _clamp(x: float, lo: float, hi: float) -> float:
+    return min(max(x, lo), hi)
+
+
+def _fit_composed_factors(m: Machine, cf_samples: Sequence[Mapping],
+                          halo_samples: Sequence[Mapping]
+                          ) -> tuple[float, float]:
+    """(composed_cf_factor, composed_halo_factor) from the fused
+    microbenchmarks, decomposed against the *fitted* machine `m` so the
+    factors isolate what composition adds on top of the standalone α-β
+    fits.  Per-sample ratios are clamped to [0.25, 8] (a factor outside
+    that is a measurement failure, not a model truth) and the median is
+    taken; 1.0 when nothing measured."""
+    ws = 4                       # the benches allocate float32
+    halo_ratios = []
+    for s in halo_samples:
+        g = s["geom"]
+        pred = _halo_time(m, g["o"], g["n"], g["c"], g["h_l"], g["w_l"],
+                          g["hops"], 0)
+        meas = s["t_fused"] - s["t_compute"]
+        if pred > 0 and meas > 0:
+            halo_ratios.append(_clamp(meas / pred, 0.25, 8.0))
+    cf_ratios = []
+    for s in cf_samples:
+        g = s["geom"]
+        pred_halo = _halo_time(m, g["o"], g["n"], g["c_l"], g["h_l"],
+                               g["w_l"], 1, 0)
+        pred_cf = reduce_scatter_time(
+            m, s["p_cf"], g["n"] * g["f"] * g["h_l"] * g["w_l"] * ws)
+        meas = s["t_fused"] - s["t_compute"] - pred_halo
+        if pred_cf > 0 and meas > 0:
+            cf_ratios.append(_clamp(meas / pred_cf, 0.25, 8.0))
+    cf = float(np.median(cf_ratios)) if cf_ratios else 1.0
+    halo = float(np.median(halo_ratios)) if halo_ratios else 1.0
+    return cf, halo
+
+
+def _measure_composition(specs: Sequence[ConvLayer], real_mesh,
+                         mesh_shape: Mapping[str, int],
+                         comm_axes: Sequence[str], machine: Machine,
+                         timer: Timer, max_sizes: int,
+                         wordsize: int) -> dict:
+    """Run the composed-cost microbenchmarks against an already-fitted
+    `machine` and return the table entries + fitted correction factors —
+    shared by calibrate() and load_or_run's backfill of pre-composition
+    files.  No live comm axes -> analytic defaults (factors 1.0, empty
+    entries), mirroring fit_eta's discipline."""
+    entries: dict[tuple, float] = {}
+    shuffle_samples: list[list] = []       # [p, nbytes, seconds]
+    if comm_axes:
+        for p_tot, nb in _representative(
+                shuffle_sizes(specs, mesh_shape, wordsize), max_sizes):
+            t = _bench_shuffle(real_mesh, comm_axes, nb, timer)
+            entries[(SHUFFLE_KIND, p_tot, nb)] = t
+            shuffle_samples.append([p_tot, nb, t])
+    ratios = []
+    for p, nb, t in shuffle_samples:
+        pred = all_to_all_time(machine, p, nb)
+        if pred > 0 and t > 0:
+            ratios.append(_clamp(t / pred, 0.25, 8.0))
+    shuffle_factor = float(np.median(ratios)) if ratios else 1.0
+
+    cf_samples, halo_samples = [], []
+    if len(comm_axes) >= 2:
+        a0, a1 = comm_axes[0], comm_axes[1]
+        cf_samples = [_bench_composed_cf(real_mesh, a0, a1, timer),
+                      _bench_composed_cf(real_mesh, a1, a0, timer)]
+        halo_samples = [_bench_product_halo(real_mesh, (a0, a1), timer)]
+        for s in cf_samples:
+            entries[("composed:cf", s["p_cf"], s["p_sp"])] = s["t_fused"]
+        for s in halo_samples:
+            entries[("composed:halo", s["p"], s["geom"]["hops"])] = \
+                s["t_fused"]
+    cf_factor, halo_factor = _fit_composed_factors(machine, cf_samples,
+                                                   halo_samples)
+    return {"entries": entries,
+            "shuffle_factor": shuffle_factor,
+            "cf_factor": cf_factor,
+            "halo_factor": halo_factor,
+            "shuffle_samples": shuffle_samples,
+            "cf_samples": cf_samples,
+            "halo_samples": halo_samples}
+
+
+# ---------------------------------------------------------------------------
 # fitting
 # ---------------------------------------------------------------------------
 
@@ -599,6 +827,18 @@ def calibrate(specs: Sequence[ConvLayer], mesh, *,
         mem_capacity=detect_mem_capacity(),
         overlap_eta=overlap_eta)
 
+    # -- 4. composed costs: §III-C shuffles at the real transition sizes,
+    # fused CF×spatial, product-axis halo — measured against the fitted
+    # constants above so the correction factors isolate composition -------
+    comp = _measure_composition(specs, real_mesh, mesh_shape, comm_axes,
+                                machine, timer, max_sizes, base.wordsize)
+    entries.update(comp["entries"])
+    machine = dataclasses.replace(
+        machine,
+        composed_cf_factor=comp["cf_factor"],
+        composed_halo_factor=comp["halo_factor"],
+        shuffle_factor=comp["shuffle_factor"])
+
     meta = {
         "backend": jax.default_backend(),
         "ndevices": jax.device_count(),
@@ -612,6 +852,13 @@ def calibrate(specs: Sequence[ConvLayer], mesh, *,
         "p2p_samples": p2p_samples,
         "collective_samples": coll_samples,
         "eta_fit": {"eta": overlap_eta, "samples": eta_samples},
+        "shuffle_fit": {"factor": comp["shuffle_factor"],
+                        "samples": comp["shuffle_samples"]},
+        "composed_fit": {"cf_factor": comp["cf_factor"],
+                         "halo_factor": comp["halo_factor"],
+                         "cf_samples": comp["cf_samples"],
+                         "halo_samples": comp["halo_samples"]},
+        "mem_capacity_source": mem_capacity_source(),
         "layers": [l.name for l in specs],
     }
     return Calibration(machine=machine, table=EmpiricalTable(entries),
@@ -705,6 +952,50 @@ def load_or_run(path: str, specs: Sequence[ConvLayer], mesh, *,
             if path:
                 cal.save(path)
             print(f"calibrate: backfilled overlap eta={eta:.2f} into {path}")
+        if "mem_capacity_source" not in cal.meta:
+            cal.meta["mem_capacity_source"] = mem_capacity_source()
+            if path:
+                cal.save(path)
+        if "shuffle_fit" not in cal.meta or \
+                "composed_fit" not in cal.meta:
+            # a pre-composition calibration file: measure the §III-C
+            # shuffle / fused-composition benches now against the stored
+            # machine constants (the Machine JSON simply lacked the factor
+            # fields and deserialized at the analytic 1.0 defaults), record
+            # the capacity-detection source, and persist.
+            timer = kwargs.get("timer")
+            if timer is None:
+                reps = kwargs.get("reps", 5)
+                timer = lambda fn, *a: time_fn(fn, *a,      # noqa: E731
+                                               reps=reps)
+            mesh_shape = _mesh_shape_of(mesh)
+            real_mesh = mesh if hasattr(mesh, "devices") else None
+            comm_axes = sorted(ax for ax, sz in mesh_shape.items()
+                               if sz > 1) if real_mesh is not None else []
+            comp = _measure_composition(
+                specs, real_mesh, mesh_shape, comm_axes, cal.machine,
+                timer, kwargs.get("max_sizes", 5),
+                cal.machine.wordsize)
+            cal.table.entries.update(comp["entries"])
+            cal.machine = dataclasses.replace(
+                cal.machine,
+                composed_cf_factor=comp["cf_factor"],
+                composed_halo_factor=comp["halo_factor"],
+                shuffle_factor=comp["shuffle_factor"])
+            cal.meta.setdefault(
+                "shuffle_fit", {"factor": comp["shuffle_factor"],
+                                "samples": comp["shuffle_samples"]})
+            cal.meta.setdefault(
+                "composed_fit", {"cf_factor": comp["cf_factor"],
+                                 "halo_factor": comp["halo_factor"],
+                                 "cf_samples": comp["cf_samples"],
+                                 "halo_samples": comp["halo_samples"]})
+            if path:
+                cal.save(path)
+            print(f"calibrate: backfilled composed-cost fit into {path} "
+                  f"(shuffle x{comp['shuffle_factor']:.2f}, "
+                  f"cf x{comp['cf_factor']:.2f}, "
+                  f"halo x{comp['halo_factor']:.2f})")
         ef = cal.meta.get("eta_fit") or {}
         if ef.get("samples"):
             # loaded file carries a real measurement — install it for the
@@ -730,6 +1021,64 @@ def load_or_run(path: str, specs: Sequence[ConvLayer], mesh, *,
         cal.save(path)
         print(f"calibration written to {path}: {cal.summary()}")
     return cal
+
+
+def refit_from_attribution(cal: Calibration, report: Mapping, *,
+                           path: str | None = None,
+                           damp: float = 1.0) -> dict:
+    """Close the attribution loop: fold a measured per-term drift report
+    (NetworkPlan.attribution_report / BENCH_attribution.json) back into the
+    calibration's composition factors, so model/measured drift *drives
+    recalibration* instead of only printing a warning.
+
+    The comm-side term drifts map onto the factors that price them:
+    `shuffle` -> shuffle_factor; `fp_comm`/`bp_comm` (halo + CF
+    collectives, which the composed workloads dominate with composed
+    terms) -> both composed factors, weighted by predicted seconds.
+    Compute-side terms (fp/bp_compute, bpa) are left to the conv table and
+    the collective fit — nudging factors by compute drift would smear
+    kernel noise over comm terms.
+
+    Each factor takes a multiplicative step drift**damp clamped to
+    [0.25, 4] per refit and [0.1, 10] absolute; the applied steps append to
+    meta["attribution_refits"].  Saves to `path` when given.  Returns the
+    {factor: new value} dict of what changed."""
+    terms = report.get("terms") or {}
+
+    def drift_of(*names):
+        num = den = 0.0
+        for t in names:
+            row = terms.get(t)
+            if row and row.get("predicted_s", 0) > 0 and \
+                    row.get("drift", 0) > 0:
+                num += row["predicted_s"] * row["drift"]
+                den += row["predicted_s"]
+        return (num / den) if den > 0 else None
+
+    def step(cur, drift):
+        mult = _clamp(drift ** damp, 0.25, 4.0)
+        return _clamp(cur * mult, 0.1, 10.0)
+
+    changed: dict[str, float] = {}
+    sh_drift = drift_of("shuffle")
+    if sh_drift is not None:
+        changed["shuffle_factor"] = step(cal.machine.shuffle_factor,
+                                         sh_drift)
+    comm_drift = drift_of("fp_comm", "bp_comm")
+    if comm_drift is not None:
+        changed["composed_cf_factor"] = step(
+            cal.machine.composed_cf_factor, comm_drift)
+        changed["composed_halo_factor"] = step(
+            cal.machine.composed_halo_factor, comm_drift)
+    if changed:
+        cal.machine = dataclasses.replace(cal.machine, **changed)
+        cal.meta.setdefault("attribution_refits", []).append(
+            {"worst_term": report.get("worst_term"),
+             "drifts": {"shuffle": sh_drift, "comm": comm_drift},
+             "applied": dict(changed)})
+        if path:
+            cal.save(path)
+    return changed
 
 
 # ---------------------------------------------------------------------------

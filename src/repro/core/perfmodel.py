@@ -62,6 +62,20 @@ class Machine:
     # to fully serialized, so the solver is never rewarded for overlap the
     # hardware cannot deliver.
     overlap_eta: float = 1.0
+    # composition correction factors, fitted by core.calibrate from fused
+    # microbenchmarks (the 4–13× model/measured gap on the composed
+    # workloads lives in exactly these terms).  All default to 1.0 (pure
+    # analytic model).  They scale priced *seconds* only, never payload
+    # bytes, so the static collective auditor is unaffected.
+    #   composed_cf_factor: CF data collectives executing inside a halo'd
+    #     spatial block (CF × spatial shard_maps) vs the standalone α-β fit.
+    #   composed_halo_factor: product-axis halo exchange with its
+    #     boundary-crossing hops vs the single-axis p2p fit.
+    #   shuffle_factor: §III-C all-to-all reshard vs the analytic pairwise
+    #     model, used when no measured `shuffle:` table entry is near.
+    composed_cf_factor: float = 1.0
+    composed_halo_factor: float = 1.0
+    shuffle_factor: float = 1.0
 
 
 # Lassen (paper's machine): V100 fp32 ~15.7 TF; NVLINK2 ~150 GB/s/dir
@@ -160,18 +174,52 @@ class ConvLayer:
         return self.n * self.f * self.h_out * self.w_out
 
 
+# key families beyond the conv-shape 8-tuples: measured §III-C reshard
+# shuffles keyed (SHUFFLE_KIND, p_total, local_bytes) — one direction's
+# seconds; shuffle_time charges 2×.  Composed-microbench provenance rows
+# use the "composed:" prefix (calibrate writes them; lookup ignores them).
+SHUFFLE_KIND = "shuffle:a2a"
+
+
 class EmpiricalTable:
     """Optional measured-runtime lookup, the paper's own methodology: keys
     (kind, n, c, h, w, f, k, s) -> seconds.  Falls back to the analytic
     model for missing entries.  `core.calibrate` fills it by timing local
     convolutions at the shard shapes the solver's candidates produce, and
-    round-trips it through JSON (BENCH_calibration.json)."""
+    round-trips it through JSON (BENCH_calibration.json).  Also holds the
+    measured `shuffle:`/`composed:` key families (see SHUFFLE_KIND)."""
 
     def __init__(self, entries: Mapping[tuple, float] | None = None):
         self.entries = dict(entries or {})
 
     def lookup(self, layer: ConvLayer, n, c, h, w, f) -> float | None:
         return self.entries.get((layer.kind, n, c, h, w, f, layer.k, layer.s))
+
+    def lookup_shuffle(self, p: int, nbytes: int) -> float | None:
+        """Measured one-direction shuffle seconds at group size `p` and
+        `nbytes` local bytes: exact hit, else piecewise-linear interpolation
+        between the nearest measured sizes at the same p (clamped to the
+        endpoints outside the measured range)."""
+        t = self.entries.get((SHUFFLE_KIND, p, nbytes))
+        if t is not None:
+            return t
+        rows = sorted((k[2], v) for k, v in self.entries.items()
+                      if k[0] == SHUFFLE_KIND and k[1] == p)
+        if not rows:
+            return None
+        # outside 2× of the measured range the table says nothing — fall
+        # back to the analytic model (× shuffle_factor) rather than clamp.
+        if nbytes < rows[0][0] // 2 or nbytes > 2 * rows[-1][0]:
+            return None
+        if nbytes <= rows[0][0]:
+            return rows[0][1]
+        if nbytes >= rows[-1][0]:
+            return rows[-1][1]
+        for (b0, t0), (b1, t1) in zip(rows, rows[1:]):
+            if b0 <= nbytes <= b1:
+                frac = (nbytes - b0) / max(b1 - b0, 1)
+                return t0 + frac * (t1 - t0)
+        return None
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -304,7 +352,16 @@ def layer_cost(m: Machine, layer: ConvLayer, dist: Dist,
     f_fwd = layer.f if p_c > 1 else f_l
     fp_comp = conv_compute_time(m, layer, n_l, c_l, h_l, w_l, f_fwd, table,
                                 eff)
-    halo_x = _halo_time(m, layer.o, n_l, c_l, h_l, w_l, h_hops, w_hops)
+    # composition correction factors (fitted by core.calibrate from fused
+    # microbenchmarks; 1.0 = pure analytic).  halo_f applies when a spatial
+    # dim is split over a *product* of mesh axes (boundary-crossing hops);
+    # cf_f applies to the CF collectives when they execute inside a halo'd
+    # spatial block (CF × spatial composition).
+    halo_f = m.composed_halo_factor if (h_hops > 1 or w_hops > 1) else 1.0
+    cf_f = m.composed_cf_factor if (p_c > 1 or p_f > 1) and \
+        (h_hops or w_hops) else 1.0
+    halo_x = halo_f * _halo_time(m, layer.o, n_l, c_l, h_l, w_l,
+                                 h_hops, w_hops)
     if p_c > 1:
         # the CF data collective runs at the *sub-mesh* size p_c with the
         # spatially-local payload (h_out_l/w_out_l already divide out any
@@ -313,7 +370,7 @@ def layer_cost(m: Machine, layer: ConvLayer, dist: Dist,
         # mode (core.plan picks it with cf_mode_for) — so the forward term
         # prices that min and the costed plan matches the executed one.
         words = cf_collective_words(layer, dist, mesh_shape)
-        halo_x += min(
+        halo_x += cf_f * min(
             reduce_scatter_time(m, p_c, words["rs_y"] * m.wordsize),
             all_gather_time(m, p_c, words["ag_x"] * m.wordsize))
     # overlap credit (§IV-A): the schedule can hide at most min(comm,
@@ -344,17 +401,17 @@ def layer_cost(m: Machine, layer: ConvLayer, dist: Dist,
     # dL/dy lives at the *output* extents (h_out/w_out): for strided layers
     # the backward halo messages are stride-times smaller than the forward
     # ones — using the input extents here over-charged BPx comm.
-    halo_dy = _halo_time(m, layer.o, n_l, f_l, h_out_l, w_out_l,
-                         h_hops, w_hops)
+    halo_dy = halo_f * _halo_time(m, layer.o, n_l, f_l, h_out_l, w_out_l,
+                                  h_hops, w_hops)
     if p_f > 1:
-        halo_dy += reduce_scatter_time(
+        halo_dy += cf_f * reduce_scatter_time(
             m, p_f, n_l * layer.c * h_l * w_l * m.wordsize)
     # BPw: local filter-gradient contraction, needs no halo (§IV-A); under
     # CF parallelism it needs full-F dL/dy — an all-gather over the group.
     bpw_comp = conv_compute_time(m, layer, n_l, c_l, h_l, w_l, f_fwd, table,
                                  eff)
     if p_f > 1:
-        bpw_comp += all_gather_time(
+        bpw_comp += cf_f * all_gather_time(
             m, p_f, n_l * layer.f * h_out_l * w_out_l * m.wordsize)
     if overlap:
         # §IV-A: the dL/dx halo exchange hides inside the dL/dw conv —
@@ -790,17 +847,33 @@ def network_memory(m: Machine, layers: Sequence[ConvLayer],
             "peak_bytes": peak, "peak_layer": peak_layer}
 
 
+def shuffle_block_bytes(layer: ConvLayer, p: int, wordsize: int) -> int:
+    """Per-processor payload of a §III-C shuffle of ℓ's output: the one
+    definition shared by shuffle_time and calibrate's shuffle-size grid, so
+    measured `shuffle:` table keys match the keys priced plans look up."""
+    return int(layer.act_words() / max(p, 1) * wordsize)
+
+
 def shuffle_time(m: Machine, layer: ConvLayer, d_i: Dist, d_j: Dist,
-                 mesh_shape: Mapping[str, int]) -> float:
-    """Shuffle(D_i, D_j): all-to-all redistribution of ℓ's output (§III-C)."""
+                 mesh_shape: Mapping[str, int],
+                 table: EmpiricalTable | None = None) -> float:
+    """Shuffle(D_i, D_j): all-to-all redistribution of ℓ's output (§III-C).
+
+    Prefers a measured `shuffle:` table entry at (p, local_bytes) — exact or
+    size-interpolated — over the analytic pairwise model; the analytic
+    fallback is scaled by the machine's fitted shuffle_factor."""
     if d_i.same_as(d_j):
         return 0.0
     p = 1
     for ax, sz in mesh_shape.items():
         p *= sz
-    local_bytes = layer.act_words() / p * m.wordsize
+    local_bytes = shuffle_block_bytes(layer, p, m.wordsize)
     # forward shuffle of y and backward shuffle of dL/dx
-    return 2 * all_to_all_time(m, p, local_bytes)
+    if table is not None:
+        t = table.lookup_shuffle(p, local_bytes)
+        if t is not None:
+            return 2 * t
+    return 2 * all_to_all_time(m, p, local_bytes) * m.shuffle_factor
 
 
 # ---------------------------------------------------------------------------
@@ -825,7 +898,8 @@ def network_cost(m: Machine, layers: Sequence[ConvLayer],
              for l, d in zip(layers, dists)]
 
     fp_time = sum(c.fp for c in costs)
-    shuf = sum(shuffle_time(m, layers[i], dists[i], dists[i + 1], mesh_shape)
+    shuf = sum(shuffle_time(m, layers[i], dists[i], dists[i + 1], mesh_shape,
+                            table)
                for i in range(len(layers) - 1))
 
     # backward timeline with greedy allreduce overlap

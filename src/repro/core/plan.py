@@ -56,8 +56,9 @@ from repro.core.perfmodel import (ConvLayer, EmpiricalTable, Machine,
                                   layer_memory, network_cost,
                                   network_memory, shuffle_time)
 from repro.core.spatial_conv import ConvSharding
-from repro.core.strategy import (CapacityError, candidate_dists, solve_dag,
-                                 solve_line)
+from repro.core.strategy import (CapacityError, candidate_dists,
+                                 parse_search, solve_dag, solve_dag_beam,
+                                 solve_hillclimb, solve_line)
 from repro.utils import human_bytes
 
 
@@ -167,7 +168,8 @@ def is_executable(d: Dist, mesh_shape: Mapping[str, int]) -> bool:
 
 def executable_candidates(layer: ConvLayer, mesh_shape: Mapping[str, int],
                           allow_w_split: bool = True,
-                          allow_channel_filter: bool = True) -> list[Dist]:
+                          allow_channel_filter: bool = True,
+                          wide: bool = False) -> list[Dist]:
     """The §V-C candidate set restricted to runtime-executable dists.
 
     Channel/filter candidates (§III-D) are included by default now that
@@ -179,11 +181,17 @@ def executable_candidates(layer: ConvLayer, mesh_shape: Mapping[str, int],
     sees what it can run.  Never empty: a fully replicated layer is always
     executable (the solver then pays pure redundancy for it, which
     correctly prices it out whenever any parallel candidate exists).
+
+    `wide` forwards to candidate_dists: the beam/hillclimb search space
+    also lets mesh axes go unassigned (partial replication) — every such
+    dist still lowers through dist_to_sharding, so is_executable keeps the
+    widened set honest.
     """
     out = [d for d in candidate_dists(
                layer, mesh_shape,
                allow_channel_filter=allow_channel_filter,
-               allow_w_split=allow_w_split)
+               allow_w_split=allow_w_split,
+               wide=wide)
            if is_executable(d, mesh_shape)]
     return out or [Dist("replicated", {})]
 
@@ -640,7 +648,7 @@ def compile_plan(dists: Mapping[str, Dist] | Sequence[Dist],
         for i in range(len(cs) - 1):
             predicted["shuffle_per_layer"][cs[i + 1].name] = shuffle_time(
                 machine, cs[i], final[cs[i].name], final[cs[i + 1].name],
-                mesh_shape)
+                mesh_shape, table)
         # the priced-collective inventory (perfmodel.layer_collectives):
         # what the static auditor (repro.analysis) joins the traced jaxpr
         # against.  first=True: training losses grad wrt params only, so
@@ -770,7 +778,8 @@ def plan_line(machine: Machine, specs: Sequence[ConvLayer], mesh, *,
               allow_w_split: bool = True,
               allow_channel_filter: bool = True,
               mem_limit: float | None = None,
-              opt_words: float = 1.0) -> NetworkPlan:
+              opt_words: float = 1.0,
+              search: str = "greedy") -> NetworkPlan:
     """Line networks (meshnet): §V-C shortest path over executable
     candidates (sample, spatial and channel/filter), compiled to a
     NetworkPlan.
@@ -778,13 +787,27 @@ def plan_line(machine: Machine, specs: Sequence[ConvLayer], mesh, *,
     `mem_limit` (bytes/device) makes the solve memory-aware: min-time
     subject to every layer's resident set AND the whole-network peak
     (stash accumulation included) fitting — the §VI Table-2 capability.
+
+    `search` widens the space beyond the paper's heuristic: "greedy" is
+    the default one-target-per-axis DP; "beam[:N]" runs the same exact
+    line DP over the *wide* candidate set (axes may go unassigned), a
+    strict superset, so its predicted optimum is never worse; "hillclimb"
+    is the stochastic local-search baseline over the same wide set.
     """
+    mode, width = parse_search(search)
     mesh_shape = _mesh_shape(mesh)
     cands = [executable_candidates(l, mesh_shape, allow_w_split,
-                                   allow_channel_filter)
+                                   allow_channel_filter,
+                                   wide=mode != "greedy")
              for l in specs]
 
     def solve(limit):
+        if mode == "hillclimb":
+            return solve_hillclimb(machine, specs, cands, mesh_shape, table,
+                                   overlap, mem_limit=limit,
+                                   opt_words=opt_words).dists
+        # a line's beam search IS the exact DP (solve_line); the widened
+        # candidate set is where beam mode's advantage lives
         return solve_line(machine, specs, cands, mesh_shape, table, overlap,
                           mem_limit=limit, opt_words=opt_words).dists
 
@@ -802,24 +825,50 @@ def plan_graph(machine: Machine, graph, specs: Sequence[ConvLayer], mesh, *,
                allow_w_split: bool = True,
                allow_channel_filter: bool = True,
                mem_limit: float | None = None,
-               opt_words: float = 1.0) -> NetworkPlan:
+               opt_words: float = 1.0,
+               search: str = "greedy") -> NetworkPlan:
     """Branchy networks (ResNet): §V-C longest-path-first over the DAG.
 
     `specs` fixes the execution/validation order and may be a subset of the
     graph (e.g. the main path); side-branch nodes present in the graph but
     not in `specs` are compiled too, ordered after their predecessors.
     `mem_limit` applies the same capacity constraint as plan_line.
+
+    `search` = "beam[:N]" replaces longest-path-first with the global
+    reshard-cost-aware beam DP (strategy.solve_dag_beam) over the wide
+    candidate set — every cross edge between paths is priced, not just
+    the fixed paths'.  "hillclimb" runs the stochastic baseline over the
+    DAG's full edge set.
     """
+    mode, width = parse_search(search)
     mesh_shape = _mesh_shape(mesh)
     names = [l.name for l in specs]
     extra = [n for n in graph.nodes if n not in set(names)]
     all_specs = list(specs) + [graph.nodes[n]["layer"] for n in extra]
 
+    def candidate_fn(l):
+        return executable_candidates(l, mesh_shape, allow_w_split,
+                                     allow_channel_filter,
+                                     wide=mode != "greedy")
+
     def solve(limit):
+        if mode == "beam":
+            return solve_dag_beam(machine, graph, mesh_shape, table,
+                                  overlap, candidate_fn=candidate_fn,
+                                  mem_limit=limit, opt_words=opt_words,
+                                  width=width)
+        if mode == "hillclimb":
+            order = list(graph.nodes)
+            pos = {n: i for i, n in enumerate(order)}
+            layers = [graph.nodes[n]["layer"] for n in order]
+            res = solve_hillclimb(
+                machine, layers, [candidate_fn(l) for l in layers],
+                mesh_shape, table, overlap,
+                edges=[(pos[u], pos[v]) for u, v in graph.edges],
+                mem_limit=limit, opt_words=opt_words)
+            return {n: d for n, d in zip(order, res.dists)}
         return solve_dag(machine, graph, mesh_shape, table, overlap,
-                         candidate_fn=lambda l: executable_candidates(
-                             l, mesh_shape, allow_w_split,
-                             allow_channel_filter),
+                         candidate_fn=candidate_fn,
                          mem_limit=limit, opt_words=opt_words)
 
     def compile_(dists, validate_limit):

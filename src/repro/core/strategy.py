@@ -78,7 +78,8 @@ def prune_by_memory(m: Machine, layer: ConvLayer,
 
 def candidate_dists(layer: ConvLayer, mesh_shape: Mapping[str, int],
                     allow_channel_filter: bool = False,
-                    allow_w_split: bool = True) -> list[Dist]:
+                    allow_w_split: bool = True,
+                    wide: bool = False) -> list[Dist]:
     """Load-balanced assignments of every mesh axis to one tensor dim.
 
     Each mesh axis independently partitions one of N / H / W / (C&F); an
@@ -86,6 +87,11 @@ def candidate_dists(layer: ConvLayer, mesh_shape: Mapping[str, int],
     at least kernel-sized (the paper's edge case).  Ordered cheapest-first
     (sample < spatial < channel/filter) so ties break toward the paper's
     preference.
+
+    `wide` (the --search beam/hillclimb space, per Jia et al. 1802.04924)
+    additionally lets a mesh axis go *unassigned* ("R": the layer replicates
+    over it) — a strict superset of the default space, so a wide solve's
+    predicted optimum is never worse than the greedy one's.
     """
     axes = list(mesh_shape)
     targets = ["N", "H"]
@@ -93,9 +99,11 @@ def candidate_dists(layer: ConvLayer, mesh_shape: Mapping[str, int],
         targets.append("W")
     if allow_channel_filter and layer.kind == "conv":
         targets.append("CF")
+    if wide:
+        targets.append("R")
 
     def rank(assign):  # cheaper methods first
-        order = {"N": 0, "H": 1, "W": 1, "CF": 2}
+        order = {"N": 0, "H": 1, "W": 1, "CF": 2, "R": 3}
         return tuple(sorted(order[t] for t in assign))
 
     seen, out = set(), []
@@ -103,6 +111,8 @@ def candidate_dists(layer: ConvLayer, mesh_shape: Mapping[str, int],
                          key=rank):
         dims: dict[str, tuple[str, ...]] = {}
         for ax, tgt in zip(axes, assign):
+            if tgt == "R":      # axis left unassigned: replicate over it
+                continue
             for d in (("C", "F") if tgt == "CF" else (tgt,)):
                 dims[d] = dims.get(d, ()) + (ax,)
         d = Dist("+".join(sorted(set(assign))).lower(), dims)
@@ -166,7 +176,7 @@ def solve_line(m: Machine, layers: Sequence[ConvLayer],
             best_prev, arg = float("inf"), -1
             for p, dp in enumerate(candidates[i - 1]):
                 w = best[p] + shuffle_time(m, layers[i - 1], dp, dj,
-                                           mesh_shape)
+                                           mesh_shape, table)
                 if w < best_prev:
                     best_prev, arg = w, p
             cur.append(best_prev + lcost[i][j])
@@ -231,3 +241,161 @@ def solve_dag(m: Machine, graph: nx.DiGraph,
             if g.has_edge(u, v):
                 g[u][v]["w"] = 0.0
     return fixed
+
+
+# ---------------------------------------------------------------------------
+# global search (beyond-paper: Jia et al. 1802.04924): reshard-cost-aware
+# beam DP over the whole DAG, and a stochastic hill-climbing baseline
+# ---------------------------------------------------------------------------
+
+def solve_dag_beam(m: Machine, graph: nx.DiGraph,
+                   mesh_shape: Mapping[str, int],
+                   table: EmpiricalTable | None = None,
+                   overlap: bool = True,
+                   allow_channel_filter: bool = False,
+                   candidate_fn=None,
+                   mem_limit: float | None = None,
+                   opt_words: float = 1.0,
+                   width: int = 4) -> dict[str, Dist]:
+    """Global beam-searched DP over the *whole* DAG in topological order.
+
+    Unlike longest-path-first (solve_dag), which zeroes already-fixed path
+    edges and so never re-prices the cross edges between paths, every beam
+    state here carries a full partial assignment and each extension pays the
+    shuffle cost on *every* incoming DAG edge.  `width` beam states survive
+    per layer; width -> inf is the exact (exponential) DP.
+
+    Returns {layer name: Dist}.
+    """
+    assert nx.is_directed_acyclic_graph(graph)
+    if candidate_fn is None:
+        candidate_fn = lambda l: candidate_dists(  # noqa: E731
+            l, mesh_shape, allow_channel_filter=allow_channel_filter,
+            wide=True)
+    order = list(nx.topological_sort(graph))
+    pos = {name: i for i, name in enumerate(order)}
+    layers = [graph.nodes[p]["layer"] for p in order]
+    cands: list[list[Dist]] = []
+    for lay in layers:
+        cs = list(candidate_fn(lay))
+        if mem_limit:
+            cs = prune_by_memory(m, lay, cs, mesh_shape, mem_limit,
+                                 opt_words)
+        cands.append(cs)
+    lcost = [[layer_cost(m, layers[i], d, mesh_shape, table, overlap).total
+              for d in cands[i]] for i in range(len(order))]
+    preds = [[pos[u] for u in graph.predecessors(p)] for p in order]
+
+    # beam state: (cost, (dist index per already-placed layer, ...))
+    beam: list[tuple[float, tuple[int, ...]]] = [(0.0, ())]
+    for i in range(len(order)):
+        nxt = []
+        for cost, picks in beam:
+            for j, dj in enumerate(cands[i]):
+                w = cost + lcost[i][j]
+                for u in preds[i]:
+                    w += shuffle_time(m, layers[u], cands[u][picks[u]], dj,
+                                      mesh_shape, table)
+                nxt.append((w, picks + (j,)))
+        nxt.sort(key=lambda s: s[0])
+        beam = nxt[:max(width, 1)]
+    _, picks = beam[0]
+    return {order[i]: cands[i][picks[i]] for i in range(len(order))}
+
+
+def solve_hillclimb(m: Machine, layers: Sequence[ConvLayer],
+                    candidates: Sequence[Sequence[Dist]],
+                    mesh_shape: Mapping[str, int],
+                    table: EmpiricalTable | None = None,
+                    overlap: bool = True,
+                    edges: Sequence[tuple[int, int]] | None = None,
+                    seed: int = 0,
+                    iters: int = 400,
+                    restarts: int = 4,
+                    mem_limit: float | None = None,
+                    opt_words: float = 1.0) -> StrategyResult:
+    """Stochastic local-search baseline (the rebuilt benchmarks/hillclimb):
+    random restarts + single-layer moves accepted when they lower the total
+    predicted cost.  `edges` are (i, j) index pairs that pay Shuffle(D_i,
+    D_j) on ℓ_i's output; None means the line network's consecutive pairs.
+    Deterministic under `seed`.
+    """
+    import random
+    n = len(layers)
+    assert n and all(candidates), "every layer needs >= 1 candidate"
+    if mem_limit:
+        candidates = [prune_by_memory(m, layers[i], candidates[i],
+                                      mesh_shape, mem_limit, opt_words)
+                      for i in range(n)]
+    if edges is None:
+        edges = [(i, i + 1) for i in range(n - 1)]
+    touching = [[] for _ in range(n)]
+    for e in edges:
+        touching[e[0]].append(e)
+        touching[e[1]].append(e)
+    lcost = [[layer_cost(m, layers[i], d, mesh_shape, table, overlap).total
+              for d in candidates[i]] for i in range(n)]
+    shuf_memo: dict[tuple, float] = {}
+
+    def edge_cost(picks, e):
+        i, j = e
+        key = (i, j, picks[i], picks[j])
+        t = shuf_memo.get(key)
+        if t is None:
+            t = shuffle_time(m, layers[i], candidates[i][picks[i]],
+                             candidates[j][picks[j]], mesh_shape, table)
+            shuf_memo[key] = t
+        return t
+
+    def total(picks):
+        return sum(lcost[i][picks[i]] for i in range(n)) + \
+            sum(edge_cost(picks, e) for e in edges)
+
+    rng = random.Random(seed)
+    best_picks, best_cost = None, float("inf")
+    for _ in range(max(restarts, 1)):
+        picks = [rng.randrange(len(candidates[i])) for i in range(n)]
+        cost = total(picks)
+        for _ in range(iters):
+            i = rng.randrange(n)
+            if len(candidates[i]) < 2:
+                continue
+            j = rng.randrange(len(candidates[i]))
+            if j == picks[i]:
+                continue
+            old = picks[i]
+            delta = lcost[i][j] - lcost[i][old]
+            before = sum(edge_cost(picks, e) for e in touching[i])
+            picks[i] = j
+            after = sum(edge_cost(picks, e) for e in touching[i])
+            delta += after - before
+            if delta < 0:
+                cost += delta
+            else:
+                picks[i] = old
+        if cost < best_cost:
+            best_cost, best_picks = cost, list(picks)
+    return StrategyResult([candidates[i][best_picks[i]] for i in range(n)],
+                          best_cost)
+
+
+def parse_search(spec: str) -> tuple[str, int]:
+    """'greedy' | 'beam[:N]' | 'hillclimb' -> (mode, beam width)."""
+    s = (spec or "greedy").strip().lower()
+    if s == "greedy":
+        return "greedy", 0
+    if s == "hillclimb":
+        return "hillclimb", 0
+    if s == "beam":
+        return "beam", 4
+    if s.startswith("beam:"):
+        try:
+            w = int(s.split(":", 1)[1])
+        except ValueError:
+            raise ValueError(f"bad beam width in --search {spec!r}")
+        if w < 1:
+            raise ValueError(f"beam width must be >= 1, got {w}")
+        return "beam", w
+    raise ValueError(
+        f"unknown search mode {spec!r} (expected greedy, beam[:N] or "
+        f"hillclimb)")

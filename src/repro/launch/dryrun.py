@@ -423,9 +423,12 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
     return result
 
 
-def run_audit(workload_names, out_path: str, hlo: bool = True) -> int:
+def run_audit(workload_names, out_path: str, hlo: bool = True,
+              search: str = "greedy") -> int:
     """--audit: lint + collective-audit the bench workloads' solved plans,
-    lowering-only.  Returns the process exit code (non-zero iff any
+    lowering-only.  `search` selects the solver's search mode (greedy |
+    beam[:N] | hillclimb) so the widened-search plans audit costed ==
+    executed too.  Returns the process exit code (non-zero iff any
     error-severity finding)."""
     from repro import analysis
     from repro.analysis import workloads as WL
@@ -442,6 +445,7 @@ def run_audit(workload_names, out_path: str, hlo: bool = True) -> int:
         "schema": "repro/plan_audit@1",
         "backend": jax.default_backend(),
         "mesh": dict(mesh.shape),
+        "search": search,
         # which shard_map replication policy each backend's regions
         # compile under (the one utils.replication_policy source of truth)
         "replication_policy": {
@@ -458,7 +462,8 @@ def run_audit(workload_names, out_path: str, hlo: bool = True) -> int:
             report["workloads"][name] = {"skipped": True}
             continue
         t0 = time.time()
-        plan, specs, cfg = WL.solve_workload(name, pm.TPU_V5E, mesh)
+        plan, specs, cfg = WL.solve_workload(name, pm.TPU_V5E, mesh,
+                                             search=search)
         findings = plan.audit(specs, mesh, cfg=cfg, overlap=True, hlo=hlo)
         errs = analysis.error_count(findings)
         n_errors += errs
@@ -502,10 +507,16 @@ def main():
     ap.add_argument("--no-hlo", action="store_true",
                     help="with --audit: skip the StableHLO cross-check "
                          "pass (jaxpr-only, faster)")
+    ap.add_argument("--search", default="greedy",
+                    metavar="greedy|beam[:N]|hillclimb",
+                    help="with --audit: solver search mode for the audited "
+                         "workload plans — CI audits the widened beam "
+                         "search's plans next to the greedy ones")
     args = ap.parse_args()
     if args.audit is not None:
         raise SystemExit(run_audit(args.audit, args.audit_out,
-                                   hlo=not args.no_hlo))
+                                   hlo=not args.no_hlo,
+                                   search=args.search))
     if not args.arch:
         ap.error("--arch is required (unless running --audit)")
     r = run_cell(registry.canon(args.arch), args.shape, args.multi_pod,

@@ -110,11 +110,13 @@ def build_cnn_plan(args, arch, cfg, mesh, ba):
             plan = plan_lib.plan_graph(machine, graph, specs, mesh,
                                        table=table,
                                        allow_channel_filter=allow_cf,
-                                       mem_limit=mem_limit)
+                                       mem_limit=mem_limit,
+                                       search=args.search)
         else:
             plan = plan_lib.plan_line(machine, specs, mesh, table=table,
                                       allow_channel_filter=allow_cf,
-                                      mem_limit=mem_limit)
+                                      mem_limit=mem_limit,
+                                      search=args.search)
         print(f"strategy optimizer ({time.time() - t0:.2f}s):")
         print(plan.describe())
     else:
@@ -191,6 +193,15 @@ def build(args, mesh):
     else:
         from repro.models.lm import transformer as T
         from repro.models.lm.modules import ShardCtx
+        if args.strategy == "auto":
+            # quarantine, not silence: the §V-C optimizer covers the CNN
+            # archs (registry.SOLVABLE_ARCHS); an LM arch asking for a
+            # solved plan would silently train uniform otherwise
+            raise SystemExit(
+                f"--strategy auto covers the solvable CNN archs "
+                f"{registry.SOLVABLE_ARCHS}; {arch!r} is an LM arch the "
+                f"§V-C optimizer has no candidate space for (drop "
+                f"--strategy auto to train it with the uniform sharding)")
         if args.calibrate:
             logging.warning("--calibrate covers the CNN archs only; "
                             "ignored for %s", arch)
@@ -237,6 +248,17 @@ def main():
     ap.add_argument("--no-cf", action="store_true",
                     help="exclude channel/filter candidates from --strategy "
                          "auto (sample/spatial only, the pre-CF behavior)")
+    ap.add_argument("--search", default="greedy",
+                    metavar="greedy|beam[:N]|hillclimb",
+                    help="--strategy auto search mode: 'greedy' is the "
+                         "paper's one-target-per-axis DP (default); "
+                         "'beam[:N]' widens the candidate space (mesh axes "
+                         "may go unassigned) and, on branchy DAGs, replaces "
+                         "longest-path-first with a reshard-cost-aware "
+                         "global beam DP of width N (default 4); "
+                         "'hillclimb' is the stochastic local-search "
+                         "baseline over the same wide space.  An elastic "
+                         "remesh re-solves with the same mode")
     ap.add_argument("--calibrate", nargs="?", const="BENCH_calibration.json",
                     default=None, metavar="PATH",
                     help="solve --strategy auto on measured costs: "
@@ -314,6 +336,11 @@ def main():
                          "fail fast naming the first offending layer "
                          "(train.metrics.debug_nan_check)")
     args = ap.parse_args()
+    try:
+        from repro.core.strategy import parse_search
+        parse_search(args.search)
+    except ValueError as e:
+        ap.error(str(e))
 
     mesh = make_mesh(data=args.data, model=args.model, pod=args.pod)
     cfg, params, opt, loss, mk, put, prec, extras = build(args, mesh)

@@ -1,0 +1,191 @@
+"""§III-C shuffle pricing: shuffle_time properties, the calibrated
+`shuffle:` table path, and the regression pin that a calibration covers
+every transition a compiled plan prices.
+
+Calibration runs here use the fake-timer + fake-mesh pattern from
+test_calibrate.py: the composition microbenchmarks are monkeypatched so
+no kernel executes, but the *key plumbing* (which (p, bytes) shuffle
+entries land in the table, and whether shuffle_time finds them) is
+exercised for real.
+"""
+import dataclasses
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import calibrate as cal
+from repro.core import perfmodel as pm
+from repro.core.distribution import Dist, hybrid, sample
+from repro.core.perfmodel import (SHUFFLE_KIND, ConvLayer, EmpiricalTable,
+                                  TPU_V5E, shuffle_block_bytes,
+                                  shuffle_time)
+from repro.models.cnn import meshnet
+
+MS22 = {"data": 2, "model": 2}
+LAYER = ConvLayer("c", n=4, c=16, h=32, w=32, f=16, k=3, s=1)
+D_H = Dist("h", {"H": ("model",), "N": ("data",)})
+D_W = Dist("w", {"W": ("model",), "N": ("data",)})
+
+
+# ----------------------------------------------------------- properties --
+def test_self_shuffle_is_free():
+    assert shuffle_time(TPU_V5E, LAYER, D_H, D_H, MS22) == 0.0
+    assert shuffle_time(TPU_V5E, LAYER, sample(("data", "model")),
+                        sample(("data", "model")), MS22) == 0.0
+
+
+def test_shuffle_is_symmetric():
+    """§III-C: the all-to-all moves the same activation volume whichever
+    direction the dist change goes — the priced cost must agree."""
+    ab = shuffle_time(TPU_V5E, LAYER, D_H, D_W, MS22)
+    ba = shuffle_time(TPU_V5E, LAYER, D_W, D_H, MS22)
+    assert ab == ba > 0.0
+
+
+def test_shuffle_factor_scales_analytic_fallback():
+    m2 = dataclasses.replace(TPU_V5E, shuffle_factor=2.0)
+    assert shuffle_time(m2, LAYER, D_H, D_W, MS22) == pytest.approx(
+        2.0 * shuffle_time(TPU_V5E, LAYER, D_H, D_W, MS22))
+
+
+def test_planted_table_entry_overrides_analytic():
+    """A measured `shuffle:` key at the exact (p, bytes) the transition
+    prices must be charged (2x: there and back), bypassing the analytic
+    model and its factor entirely."""
+    p = 4
+    nb = shuffle_block_bytes(LAYER, p, TPU_V5E.wordsize)
+    t = EmpiricalTable({(SHUFFLE_KIND, p, nb): 1.25e-4})
+    m2 = dataclasses.replace(TPU_V5E, shuffle_factor=3.0)   # must be inert
+    assert shuffle_time(m2, LAYER, D_H, D_W, MS22, table=t) == \
+        pytest.approx(2 * 1.25e-4)
+
+
+def test_lookup_shuffle_interpolates_and_bounds():
+    t = EmpiricalTable({(SHUFFLE_KIND, 4, 1000): 1e-4,
+                        (SHUFFLE_KIND, 4, 3000): 3e-4})
+    assert t.lookup_shuffle(4, 1000) == pytest.approx(1e-4)
+    assert t.lookup_shuffle(4, 2000) == pytest.approx(2e-4)
+    # clamped to the endpoint inside the trusted (2x) band...
+    assert t.lookup_shuffle(4, 4000) == pytest.approx(3e-4)
+    # ...and silent (analytic fallback) far outside it
+    assert t.lookup_shuffle(4, 100) is None
+    assert t.lookup_shuffle(4, 10 ** 9) is None
+    assert t.lookup_shuffle(8, 2000) is None       # other group size
+
+
+# ------------------------------------- calibrated keys cover plan needs --
+CFG = meshnet.MeshNetConfig("t", input_hw=32, in_channels=4,
+                            convs_per_block=1, widths=(8, 16))
+SPECS = meshnet.layer_specs(CFG, 4)
+
+
+def fake_timer(fn, *args):
+    return 2e-6 + 1e-9 * sum(int(np.prod(a.shape)) for a in args)
+
+
+@pytest.fixture
+def fake_calibrated(monkeypatch):
+    """A calibration against a fake 'live' 2x2 mesh: every microbenchmark
+    that would touch a device is replaced with a deterministic stand-in,
+    so the shuffle/composed key families are exercised without devices."""
+    monkeypatch.setattr(cal, "_bench_p2p",
+                        lambda mesh, ax, nb, timer: 1e-6 + 1e-10 * nb)
+    monkeypatch.setattr(cal, "_bench_collective",
+                        lambda mesh, ax, op, nb, timer: 2e-6 + 2e-10 * nb)
+    monkeypatch.setattr(cal, "_bench_overlap",
+                        lambda mesh, ax, timer: {
+                            "axis": ax, "p": 2, "t_overlap": 1e-4,
+                            "t_serial": 1.5e-4, "t_compute": 1e-4,
+                            "eta": 0.5})
+    monkeypatch.setattr(cal, "_bench_shuffle",
+                        lambda mesh, axes, nb, timer: 3e-6 + 1.5e-10 * nb)
+    monkeypatch.setattr(
+        cal, "_bench_product_halo",
+        lambda mesh, axes, timer, **kw: {
+            "axes": list(axes), "p": 4, "t_fused": 4e-4, "t_compute": 1e-4,
+            "geom": {"o": 1, "n": 2, "c": 8, "h_l": 16, "w_l": 32,
+                     "hops": 2}})
+    monkeypatch.setattr(
+        cal, "_bench_composed_cf",
+        lambda mesh, cf_axis, sp_axis, timer, **kw: {
+            "cf_axis": cf_axis, "sp_axis": sp_axis, "p_cf": 2, "p_sp": 2,
+            "t_fused": 5e-4, "t_compute": 2e-4,
+            "geom": {"o": 1, "n": 2, "c_l": 8, "f": 16, "h_l": 16,
+                     "w_l": 32}})
+    fake_mesh = types.SimpleNamespace(shape=MS22, devices=[])
+    return cal.calibrate(SPECS, fake_mesh, timer=fake_timer)
+
+
+def test_calibration_covers_every_priced_transition(fake_calibrated):
+    """The regression pin: after calibration, every §III-C transition a
+    compiled plan over these specs can price resolves to a measured
+    `shuffle:` key (exact or interpolated) — never the analytic fallback.
+    This is what 'the model/measured gap closes at the transitions the
+    plan actually takes' rests on."""
+    c = fake_calibrated
+    assert any(k[0] == SHUFFLE_KIND for k in c.table.entries)
+    p_total = 4
+    for layer in SPECS:
+        nb = shuffle_block_bytes(layer, p_total, c.machine.wordsize)
+        assert c.table.lookup_shuffle(p_total, nb) is not None, layer.name
+    # and the factors were fitted away from silence (meta records them)
+    assert "shuffle_fit" in c.meta and "composed_fit" in c.meta
+    assert c.machine.shuffle_factor > 0
+    assert c.machine.composed_cf_factor > 0
+    assert c.machine.composed_halo_factor > 0
+
+
+def test_fake_composed_fit_is_deterministic(fake_calibrated):
+    assert fake_calibrated.meta["composed_fit"]["cf_factor"] == \
+        fake_calibrated.machine.composed_cf_factor
+    assert fake_calibrated.meta["composed_fit"]["halo_factor"] == \
+        fake_calibrated.machine.composed_halo_factor
+    assert fake_calibrated.meta["shuffle_fit"]["factor"] == \
+        fake_calibrated.machine.shuffle_factor
+
+
+def test_refit_from_attribution_moves_factors(fake_calibrated, tmp_path):
+    """A drift report (shuffle 2x under, comm 3x under) must push the
+    factors up — and a second identical refit keeps compounding but stays
+    inside the absolute clamp."""
+    c = fake_calibrated
+    f0 = (c.machine.shuffle_factor, c.machine.composed_cf_factor)
+    rep = {"worst_term": "fp_comm",
+           "terms": {"shuffle": {"drift": 2.0, "predicted_s": 1e-4},
+                     "fp_comm": {"drift": 3.0, "predicted_s": 2e-4},
+                     "bp_comm": {"drift": 3.0, "predicted_s": 2e-4}}}
+    path = str(tmp_path / "cal.json")
+    changed = cal.refit_from_attribution(c, rep, path=path)
+    assert changed["shuffle_factor"] > f0[0]
+    assert changed["composed_cf_factor"] > f0[1]
+    assert c.meta["attribution_refits"][-1]["applied"] == changed
+    # round-trips: the refit factors survive save/load
+    c2 = cal.Calibration.load(path)
+    assert c2.machine.shuffle_factor == c.machine.shuffle_factor
+    for _ in range(10):
+        cal.refit_from_attribution(c, rep)
+    assert c.machine.shuffle_factor <= 10.0
+    assert c.machine.composed_cf_factor <= 10.0
+
+
+# --------------------------------------------------- mem capacity source --
+def test_mem_capacity_env_override(monkeypatch):
+    cal.detect_mem_capacity.cache_clear()
+    monkeypatch.setenv("REPRO_MEM_CAPACITY", "123456789")
+    try:
+        assert cal.detect_mem_capacity() == 123456789.0
+        assert cal.mem_capacity_source() == "env:REPRO_MEM_CAPACITY"
+    finally:
+        cal.detect_mem_capacity.cache_clear()
+
+
+def test_mem_capacity_ignores_garbage_env(monkeypatch, capsys):
+    cal.detect_mem_capacity.cache_clear()
+    monkeypatch.setenv("REPRO_MEM_CAPACITY", "not-a-number")
+    try:
+        v = cal.detect_mem_capacity()
+        assert v > 0
+        assert cal.mem_capacity_source() != "env:REPRO_MEM_CAPACITY"
+    finally:
+        cal.detect_mem_capacity.cache_clear()

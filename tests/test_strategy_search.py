@@ -1,0 +1,125 @@
+"""Widened strategy search (§V-C generalized): wide candidate sets,
+reshard-aware beam DP, hill-climbing baseline, and the fast-lane
+regression pin that the widened search never predicts worse than greedy.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import perfmodel as pm
+from repro.core import strategy as strat
+from repro.core.plan import plan_line
+from repro.models.cnn import meshnet
+
+M = pm.TPU_V5E
+MS22 = {"data": 2, "model": 2}
+MS42 = {"data": 4, "model": 2}
+
+CFG = meshnet.MeshNetConfig("t", input_hw=32, in_channels=4,
+                            convs_per_block=1, widths=(8, 16))
+SPECS = meshnet.layer_specs(CFG, 4)
+
+
+# ------------------------------------------------------- candidate space --
+def test_wide_candidates_are_a_superset():
+    """The widened set must contain every narrow candidate on every layer
+    of both meshes — the beam <= greedy ordering below rests on it."""
+    for ms in (MS22, MS42):
+        for layer in SPECS:
+            narrow = strat.candidate_dists(layer, ms,
+                                           allow_channel_filter=True)
+            wide = strat.candidate_dists(layer, ms,
+                                         allow_channel_filter=True,
+                                         wide=True)
+            keys = {repr(d.dims) for d in wide}
+            assert len(wide) >= len(narrow)
+            for d in narrow:
+                assert repr(d.dims) in keys, (layer.name, d.dims)
+
+
+def test_wide_rescues_layers_narrow_cannot_assign():
+    """A layer whose dims cannot absorb every mesh axis (here f=1, n=2 on
+    a 4x4 mesh) has NO narrow candidate; the wide set's partial-
+    replication target ('R': leave the axis unassigned) makes it
+    solvable."""
+    layer = pm.ConvLayer("pred", n=2, c=64, h=2, w=2, f=1, k=1, s=1)
+    ms = {"data": 4, "model": 4}
+    assert strat.candidate_dists(layer, ms, allow_channel_filter=True) == []
+    wide = strat.candidate_dists(layer, ms, allow_channel_filter=True,
+                                 wide=True)
+    assert wide, "partial replication must make the layer assignable"
+
+
+# ----------------------------------------------- the search-mode promise --
+@pytest.mark.parametrize("ms", [MS22, MS42], ids=["2x2", "4x2"])
+def test_beam_predicted_never_worse_than_greedy(ms):
+    """The fast-lane search-regression pin: on a layer line the widened
+    search is the exact DP over a superset space, so its predicted total
+    can only be <= the greedy (narrow longest-path-first) solve's."""
+    greedy = plan_line(M, SPECS, ms, search="greedy")
+    beam = plan_line(M, SPECS, ms, search="beam:4")
+    assert beam.predicted["total"] <= greedy.predicted["total"] + 1e-15
+
+
+def test_hillclimb_never_beats_exact_dp():
+    cands = [strat.candidate_dists(l, MS22, allow_channel_filter=True,
+                                   wide=True) for l in SPECS]
+    dp = strat.solve_line(M, SPECS, cands, MS22)
+    hc = strat.solve_hillclimb(M, SPECS, cands, MS22)
+    assert hc.cost >= dp.cost - 1e-15
+    assert len(hc.dists) == len(SPECS)
+
+
+def test_hillclimb_deterministic_under_seed():
+    cands = [strat.candidate_dists(l, MS22, allow_channel_filter=True,
+                                   wide=True) for l in SPECS]
+    a = strat.solve_hillclimb(M, SPECS, cands, MS22, seed=7)
+    b = strat.solve_hillclimb(M, SPECS, cands, MS22, seed=7)
+    assert a.cost == b.cost
+    assert [d.dims for d in a.dists] == [d.dims for d in b.dists]
+
+
+def test_hillclimb_search_mode_solves_plan():
+    p = plan_line(M, SPECS, MS22, search="hillclimb")
+    assert p.predicted["total"] > 0
+    assert set(p.layers) == set(meshnet.layer_names(CFG))
+
+
+# ------------------------------------------------------------ beam on DAG --
+def test_beam_dag_prices_every_edge():
+    """solve_dag_beam charges the reshard on EVERY incoming DAG edge (the
+    greedy solver zeroes edges into already-fixed layers), so on a
+    diamond it must return a valid assignment for every node."""
+    nx = pytest.importorskip("networkx")
+    g = nx.DiGraph()
+    mk = lambda nm: pm.ConvLayer(nm, n=4, c=8, h=32, w=32, f=8,  # noqa:E731
+                                 k=3, s=1)
+    for nm in ("a", "b", "c", "d"):
+        g.add_node(nm, layer=mk(nm))
+    g.add_edges_from([("a", "b"), ("a", "c"), ("b", "d"), ("c", "d")])
+    dists = strat.solve_dag_beam(M, g, MS22, width=4)
+    assert set(dists) == {"a", "b", "c", "d"}
+    for d in dists.values():
+        assert d is not None
+
+
+# -------------------------------------------------------------- the CLI --
+def test_parse_search():
+    assert strat.parse_search("greedy") == ("greedy", 0)
+    assert strat.parse_search("beam") == ("beam", 4)
+    assert strat.parse_search("beam:9") == ("beam", 9)
+    assert strat.parse_search("hillclimb") == ("hillclimb", 0)
+    with pytest.raises(ValueError):
+        strat.parse_search("anneal")
+    with pytest.raises(ValueError):
+        strat.parse_search("beam:0")
+
+
+def test_search_factors_do_not_change_narrow_greedy():
+    """`--search greedy` stays bit-compatible with the pre-widening solve:
+    same plan, same predicted total as calling plan_line without search."""
+    a = plan_line(M, SPECS, MS22)
+    b = plan_line(M, SPECS, MS22, search="greedy")
+    assert a.predicted["total"] == b.predicted["total"]
+    for n in a.layers:
+        assert a.layers[n].dist.same_as(b.layers[n].dist)
